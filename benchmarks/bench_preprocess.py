@@ -1,0 +1,63 @@
+"""Paper App. H.3: pre-processing cost and its amortization, plus selection
+throughput microbenchmarks (the jit-compiled greedy engines)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row
+from repro.core import MiloPreprocessor, gram_matrix, greedy, sge, stochastic_greedy
+from repro.core.greedy import stochastic_candidate_count
+from repro.core.submodular import facility_location, graph_cut
+from repro.data.datasets import GaussianMixtureDataset
+
+
+def run(verbose: bool = True) -> list[str]:
+    rows = []
+    # full preprocessing wall time vs dataset size
+    for n in (1000, 4000):
+        ds = GaussianMixtureDataset(n=n, n_classes=10, dim=32, seed=0)
+        pre = MiloPreprocessor(subset_fraction=0.1, n_sge_subsets=4, gram_block=1024)
+        t0 = time.perf_counter()
+        md = pre.preprocess(ds.features(), ds.y, jax.random.PRNGKey(0))
+        dt = time.perf_counter() - t0
+        rows.append(csv_row(f"preprocess/full_n{n}", dt * 1e6,
+                            f"k={md.k} per_sample_us={dt/n*1e6:.1f}"))
+        if verbose:
+            print(rows[-1])
+
+    # jit-compiled greedy engine throughput (whole-run-on-device; the
+    # beyond-paper replacement for submodlib's per-element host loop)
+    rng = np.random.default_rng(0)
+    z = jnp.asarray(rng.normal(size=(2048, 64)).astype(np.float32))
+    K = gram_matrix(z)
+    for name, fn in (("facility_location", facility_location), ("graph_cut", graph_cut)):
+        k = 205
+        greedy(fn, K, k).indices.block_until_ready()  # compile
+        t0 = time.perf_counter()
+        reps = 3
+        for _ in range(reps):
+            greedy(fn, K, k).indices.block_until_ready()
+        dt = (time.perf_counter() - t0) / reps
+        rows.append(csv_row(f"preprocess/greedy_{name}_n2048_k205", dt * 1e6,
+                            f"per_element_us={dt/k*1e6:.1f}"))
+        if verbose:
+            print(rows[-1])
+
+    s = stochastic_candidate_count(2048, 205, 0.01)
+    stochastic_greedy(facility_location, K, 205, jax.random.PRNGKey(0), s=s).indices.block_until_ready()
+    t0 = time.perf_counter()
+    stochastic_greedy(facility_location, K, 205, jax.random.PRNGKey(1), s=s).indices.block_until_ready()
+    dt = time.perf_counter() - t0
+    rows.append(csv_row("preprocess/stochastic_greedy_n2048_k205", dt * 1e6,
+                        f"candidates_per_step={s}"))
+    if verbose:
+        print(rows[-1])
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,100 @@
+"""Paper Fig. 7 + Table 9/10: hyper-parameter tuning with MILO subsets —
+Random/TPE search x Hyperband, speedup vs accuracy tradeoff, and Kendall-tau
+hyper-parameter ordering retention vs full-data tuning.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import csv_row, train_with_selector
+from repro.baselines.selectors import AdaptiveRandomSelector, RandomSelector
+from repro.core import CurriculumConfig, MiloPreprocessor, MiloSelector
+from repro.data.datasets import GaussianMixtureDataset
+from repro.data.pipeline import FullSelector
+from repro.tuning.tuner import RandomSearch, TPESearch, hyperband, kendall_tau
+
+SPACE = {"lr": ("log", 3e-3, 0.3), "hidden": ("choice", [32, 64, 128])}
+
+
+def _objective_factory(feats, labs, vx, vy, selector_factory, epochs_scale=1.0):
+    def objective(cfg, budget):
+        sel = selector_factory()
+        out = train_with_selector(
+            feats, labs, sel, epochs=max(2, int(budget * epochs_scale)),
+            test_x=vx, test_y=vy, lr=cfg["lr"], seed=0, eval_every=10,
+        )
+        return out["final_acc"]
+
+    return objective
+
+
+def run(verbose: bool = True) -> list[str]:
+    ds = GaussianMixtureDataset(n=1200, n_classes=6, dim=24, seed=2)
+    tr, va, te = ds.split()
+    feats, labs = ds.features()[tr], ds.y[tr]
+    vx, vy = ds.features()[va], ds.y[va]
+    rows = []
+
+    pre = MiloPreprocessor(subset_fraction=0.1, n_sge_subsets=4, gram_block=512)
+    md = pre.preprocess(feats, labs, jax.random.PRNGKey(0))
+    k = md.k
+
+    factories = {
+        "full": lambda: FullSelector(len(tr)),
+        "milo": lambda: MiloSelector(md, CurriculumConfig(total_epochs=30, kappa=1 / 6)),
+        "random": lambda: RandomSelector(len(tr), k, seed=0),
+        "adaptive_random": lambda: AdaptiveRandomSelector(len(tr), k, R=1),
+    }
+    results = {}
+    for sname, search_cls in (("random_hb", RandomSearch), ("tpe_hb", TPESearch)):
+        base_time = None
+        for fname, factory in factories.items():
+            t0 = time.perf_counter()
+            res = hyperband(_objective_factory(feats, labs, vx, vy, factory),
+                            search_cls(SPACE, seed=0), max_budget=9, eta=3)
+            wall = time.perf_counter() - t0
+            if fname == "full":
+                base_time = wall
+            results[(sname, fname)] = res
+            speedup = base_time / wall if base_time else 1.0
+            rows.append(csv_row(
+                f"tuning/{sname}/{fname}", wall * 1e6,
+                f"best={res.best_score:.4f} speedup={speedup:.2f} trials={len(res.trials)}"))
+            if verbose:
+                print(rows[-1])
+
+    # Kendall-tau ordering retention (Tab. 9): rank a fixed config grid by
+    # full-data score vs subset scores (2-seed means, 8 grid points, with the
+    # curriculum horizon matched to the actual budget).
+    grid = [{"lr": lr} for lr in (0.003, 0.007, 0.015, 0.03, 0.07, 0.15, 0.25, 0.3)]
+    k_epochs = 12
+
+    tau_factories = dict(factories)
+    tau_factories["milo"] = lambda: MiloSelector(
+        md, CurriculumConfig(total_epochs=k_epochs, kappa=1 / 6))
+
+    def scores_with(factory):
+        out = np.zeros(len(grid))
+        for seed in (0, 1):
+            out += np.asarray([
+                train_with_selector(feats, labs, factory(), epochs=k_epochs,
+                                    test_x=vx, test_y=vy, lr=c["lr"], seed=seed,
+                                    eval_every=20)["final_acc"]
+                for c in grid
+            ])
+        return out / 2
+
+    full_scores = scores_with(tau_factories["full"])
+    for fname in ("milo", "random", "adaptive_random"):
+        tau = kendall_tau(full_scores, scores_with(tau_factories[fname]))
+        rows.append(csv_row(f"tuning/kendall_tau/{fname}", 0, f"tau={tau:.4f}"))
+        if verbose:
+            print(rows[-1])
+    return rows
+
+
+if __name__ == "__main__":
+    run()

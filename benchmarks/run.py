@@ -1,0 +1,63 @@
+"""Benchmark master: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Set ``BENCH_FAST=1`` to run a
+reduced subset (CI smoke).
+
+  bench_set_functions  — Fig. 4 (set-function composition)
+  bench_exploration    — Fig. 5 (SGE vs WRE vs curriculum)
+  bench_training       — Fig. 6 / Tab. 5,7 (MILO vs baselines, speedup/deg)
+  bench_tuning         — Fig. 7 / Tab. 9,10 (hparam tuning + Kendall-tau)
+  bench_ablations      — Tab. 1,2,13,14 (hardness, kappa, R)
+  bench_preprocess     — App. H.3 (preprocess cost, greedy throughput)
+  bench_kernels        — kernel microbenches
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (
+        bench_ablations,
+        bench_exploration,
+        bench_kernels,
+        bench_preprocess,
+        bench_set_functions,
+        bench_training,
+        bench_tuning,
+    )
+
+    fast = os.environ.get("BENCH_FAST") == "1"
+    modules = [
+        ("set_functions", bench_set_functions),
+        ("exploration", bench_exploration),
+        ("training", bench_training),
+        ("tuning", bench_tuning),
+        ("ablations", bench_ablations),
+        ("preprocess", bench_preprocess),
+        ("kernels", bench_kernels),
+    ]
+    if fast:
+        modules = [m for m in modules if m[0] in ("preprocess", "kernels")]
+
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    failures = 0
+    for name, mod in modules:
+        t1 = time.time()
+        try:
+            rows = mod.run(verbose=False)
+            for r in rows:
+                print(r, flush=True)
+            print(f"# {name} done in {time.time()-t1:.1f}s", flush=True)
+        except Exception as e:  # pragma: no cover
+            failures += 1
+            print(f"# {name} FAILED: {type(e).__name__}: {e}", flush=True)
+    print(f"# total {time.time()-t0:.1f}s, failures={failures}")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""End-to-end driver (deliverable b): train an assigned-architecture LM on
+MILO-selected data with checkpointing + restart.
+
+Trains the granite-moe smoke config for a few hundred steps on the synthetic
+LM corpus, with MILO's curriculum choosing the document subset each epoch,
+then kills and resumes from the checkpoint to demonstrate fault tolerance.
+
+Run:  PYTHONPATH=src python examples/train_lm_milo.py [--steps 200]
+"""
+import argparse
+import shutil
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import registry
+from repro.core import CurriculumConfig, MiloPreprocessor, MiloSelector
+from repro.data.datasets import TokenLMDataset
+from repro.data.pipeline import Pipeline
+from repro.optim.optimizers import adamw
+from repro.optim.schedules import cosine
+from repro.train.train_state import init_train_state, make_train_step
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-moe-1b-a400m")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--ckpt", default="/tmp/milo_lm_ckpt")
+    args = ap.parse_args()
+
+    shutil.rmtree(args.ckpt, ignore_errors=True)
+    cfg = registry.smoke(args.arch)
+    ds = TokenLMDataset(n_docs=256, seq_len=64, vocab=cfg.vocab_size, seed=0)
+
+    # MILO preprocessing over document features (frozen-encoder stand-in)
+    pre = MiloPreprocessor(subset_fraction=0.5, n_sge_subsets=4, classwise=False)
+    md = pre.preprocess(ds.features(), None, jax.random.PRNGKey(0))
+
+    batch_size = 16
+    steps_per_epoch = md.k // batch_size
+    epochs = max(1, args.steps // steps_per_epoch)
+    sel = MiloSelector(md, CurriculumConfig(total_epochs=epochs, kappa=1 / 6, R=1))
+    pipe = Pipeline(ds.batch, sel, batch_size, seed=0)
+
+    opt = adamw()
+    step_fn = make_train_step(cfg, opt, cosine(1e-3, args.steps, warmup=10))
+    state = init_train_state(jax.random.PRNGKey(0), cfg, opt)
+    trainer = Trainer(step_fn, pipe, TrainerConfig(
+        epochs=epochs, checkpoint_dir=args.ckpt, checkpoint_every_steps=10,
+        log_every_steps=10))
+
+    t0 = time.time()
+    state = trainer.fit(state)
+    losses = [h["loss"] for h in trainer.history if "loss" in h]
+    print(f"trained {int(state.step)} steps in {time.time()-t0:.1f}s; "
+          f"loss {losses[0]:.3f} -> {losses[-1]:.3f}")
+    assert losses[-1] < losses[0], "loss must decrease"
+
+    # --- simulate failure + restart -----------------------------------------
+    print("simulating restart from checkpoint...")
+    state2 = init_train_state(jax.random.PRNGKey(0), cfg, opt)  # fresh init
+    trainer2 = Trainer(step_fn, pipe, TrainerConfig(
+        epochs=epochs, checkpoint_dir=args.ckpt, log_every_steps=10))
+    resumed = trainer2.fit(state2, resume=True)
+    a = np.asarray(jax.tree.leaves(state.params)[0], np.float32)
+    b = np.asarray(jax.tree.leaves(resumed.params)[0], np.float32)
+    assert np.array_equal(a, b), "restart must restore the exact state"
+    print("restart OK — resumed to identical parameters")
+
+
+if __name__ == "__main__":
+    main()

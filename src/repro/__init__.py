@@ -1,0 +1,2 @@
+"""repro: MILO (model-agnostic subset selection) as a production JAX framework."""
+__version__ = "1.0.0"

@@ -1,0 +1,10 @@
+from repro.baselines.selectors import (
+    AdaptiveRandomSelector,
+    CraigPBSelector,
+    EL2NSelector,
+    GlisterSelector,
+    GradMatchPBSelector,
+    MiloFixedSelector,
+    RandomSelector,
+    SelfSupPruneSelector,
+)

@@ -1,0 +1,217 @@
+"""Subset-selection baselines from the paper's experiments (§4).
+
+All expose the ``Selector`` protocol (``indices_for_epoch``):
+
+  RandomSelector          — fixed random subset (paper: RANDOM)
+  AdaptiveRandomSelector  — fresh random subset every R epochs (ADAPTIVE-RANDOM)
+  FullSelector            — everything (FULL); see data.pipeline
+  MiloFixedSelector       — fixed subset maximizing disparity-min (MILO (Fixed))
+  EL2NSelector            — keep hardest/easiest by EL2N score [Paul et al.'21]
+  SelfSupPruneSelector    — self-supervised prototype-distance pruning
+                            [Sorscher et al.'22] (App. I.8 comparison)
+
+Model-dependent per-epoch strategies (selection uses the *current* model):
+
+  CraigPBSelector         — per-batch CRAIG: facility location over last-layer
+                            gradient similarity [Mirzasoleiman'20, per-batch
+                            variant of Killamsetty'21]
+  GradMatchPBSelector     — per-batch GRAD-MATCH: OMP matching of the full
+                            gradient sum [Killamsetty'21]
+  GlisterSelector         — greedy validation-gain selection [Killamsetty'21]
+
+The model-dependent ones take ``grad_fn(indices) -> (n, d) per-sample (proxy)
+gradients`` and ``val_grad_fn() -> (d,)``; the trainer wires these to the
+last-layer-gradient approximation exactly as CORDS does.  Their *cost* is the
+paper's argument: each refresh is O(n·d + selection), on the training
+critical path — MILO moves all of it to preprocessing.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.greedy import greedy
+from repro.core.similarity import gram_matrix
+from repro.core.submodular import disparity_min, facility_location
+
+
+@dataclasses.dataclass
+class RandomSelector:
+    n: int
+    k: int
+    seed: int = 0
+
+    def __post_init__(self):
+        rng = np.random.default_rng(self.seed)
+        self._idx = rng.choice(self.n, size=self.k, replace=False)
+
+    def indices_for_epoch(self, epoch: int) -> np.ndarray:
+        return self._idx
+
+
+@dataclasses.dataclass
+class AdaptiveRandomSelector:
+    n: int
+    k: int
+    R: int = 1
+    seed: int = 0
+
+    def indices_for_epoch(self, epoch: int) -> np.ndarray:
+        window = epoch // self.R
+        rng = np.random.default_rng(self.seed * 7919 + window)
+        return rng.choice(self.n, size=self.k, replace=False)
+
+
+@dataclasses.dataclass
+class MiloFixedSelector:
+    """Fixed subset maximizing disparity-min over frozen-encoder features."""
+
+    features: np.ndarray
+    k: int
+
+    def __post_init__(self):
+        K = gram_matrix(jnp.asarray(self.features))
+        self._idx = np.asarray(greedy(disparity_min, K, self.k).indices, np.int64)
+
+    def indices_for_epoch(self, epoch: int) -> np.ndarray:
+        return self._idx
+
+
+@dataclasses.dataclass
+class EL2NSelector:
+    """Data-diet scoring: EL2N = ||p - onehot(y)||2, computed from an early
+    model snapshot; keeps hardest (or easiest) k."""
+
+    scores: np.ndarray
+    k: int
+    keep: str = "hard"  # hard | easy
+
+    def __post_init__(self):
+        order = np.argsort(self.scores)
+        self._idx = (order[-self.k:] if self.keep == "hard" else order[: self.k]).astype(np.int64)
+
+    def indices_for_epoch(self, epoch: int) -> np.ndarray:
+        return self._idx
+
+
+@dataclasses.dataclass
+class SelfSupPruneSelector:
+    """[Sorscher'22]: k-means prototypes in feature space; prune by distance
+    to the nearest prototype (keep hardest = farthest for large budgets)."""
+
+    features: np.ndarray
+    k: int
+    n_prototypes: int = 10
+    seed: int = 0
+
+    def __post_init__(self):
+        rng = np.random.default_rng(self.seed)
+        z = self.features
+        protos = z[rng.choice(len(z), self.n_prototypes, replace=False)].copy()
+        for _ in range(10):  # lloyd iterations
+            d = ((z[:, None] - protos[None]) ** 2).sum(-1)
+            assign = d.argmin(1)
+            for c in range(self.n_prototypes):
+                m = assign == c
+                if m.any():
+                    protos[c] = z[m].mean(0)
+        dist = ((z[:, None] - protos[None]) ** 2).sum(-1).min(1)
+        self._idx = np.argsort(dist)[-self.k:].astype(np.int64)  # hardest
+
+    def indices_for_epoch(self, epoch: int) -> np.ndarray:
+        return self._idx
+
+
+# --------------------------------------------------------------------------
+# model-dependent baselines (selection on the training critical path)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CraigPBSelector:
+    """Facility location over per-sample gradient similarity, every R epochs."""
+
+    grad_fn: Callable[[], np.ndarray]   # () -> (n, d) current per-sample grads
+    k: int
+    R: int = 10
+    selection_time: float = 0.0
+
+    def indices_for_epoch(self, epoch: int) -> np.ndarray:
+        import time
+
+        if epoch % self.R == 0 or not hasattr(self, "_idx"):
+            t0 = time.perf_counter()
+            g = jnp.asarray(self.grad_fn())
+            K = gram_matrix(g)  # gradient-similarity kernel
+            self._idx = np.asarray(greedy(facility_location, K, self.k).indices, np.int64)
+            self.selection_time += time.perf_counter() - t0
+        return self._idx
+
+
+@dataclasses.dataclass
+class GradMatchPBSelector:
+    """OMP-style matching of the mean gradient, every R epochs."""
+
+    grad_fn: Callable[[], np.ndarray]
+    k: int
+    R: int = 10
+    lam: float = 0.5
+    selection_time: float = 0.0
+
+    def indices_for_epoch(self, epoch: int) -> np.ndarray:
+        import time
+
+        if epoch % self.R == 0 or not hasattr(self, "_idx"):
+            t0 = time.perf_counter()
+            g = np.asarray(self.grad_fn(), np.float64)      # (n, d)
+            target = g.mean(0)
+            residual = target.copy()
+            chosen: list[int] = []
+            for _ in range(self.k):
+                scores = g @ residual
+                scores[chosen] = -np.inf
+                j = int(np.argmax(scores))
+                chosen.append(j)
+                # per-element weight via nonneg projection (simplified OMP)
+                denom = (g[j] @ g[j]) + self.lam
+                w = max(0.0, (g[j] @ residual) / denom)
+                residual = residual - w * g[j]
+            self._idx = np.asarray(chosen, np.int64)
+            self.selection_time += time.perf_counter() - t0
+        return self._idx
+
+
+@dataclasses.dataclass
+class GlisterSelector:
+    """Greedy maximization of validation-set gain (bilevel approximation):
+    score(j) ≈ <g_j, g_val>; taken greedily with residual updates."""
+
+    grad_fn: Callable[[], np.ndarray]
+    val_grad_fn: Callable[[], np.ndarray]
+    k: int
+    R: int = 10
+    eta: float = 0.1
+    selection_time: float = 0.0
+
+    def indices_for_epoch(self, epoch: int) -> np.ndarray:
+        import time
+
+        if epoch % self.R == 0 or not hasattr(self, "_idx"):
+            t0 = time.perf_counter()
+            g = np.asarray(self.grad_fn(), np.float64)
+            gv = np.asarray(self.val_grad_fn(), np.float64)
+            chosen: list[int] = []
+            acc = np.zeros_like(gv)
+            for _ in range(self.k):
+                # validation gain if j's gradient step is added
+                scores = g @ (gv - self.eta * acc)
+                scores[chosen] = -np.inf
+                j = int(np.argmax(scores))
+                chosen.append(j)
+                acc = acc + g[j]
+            self._idx = np.asarray(chosen, np.int64)
+            self.selection_time += time.perf_counter() - t0
+        return self._idx

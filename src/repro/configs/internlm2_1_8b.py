@@ -1,0 +1,7 @@
+"""internlm2-1.8b — GQA dense [arXiv:2403.17297]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internlm2-1.8b", family="dense", num_layers=24, d_model=2048,
+    num_heads=16, num_kv_heads=8, d_ff=8192, vocab_size=92544,
+)

@@ -1,0 +1,48 @@
+"""MILO core: model-agnostic subset selection (the paper's contribution)."""
+from repro.core.curriculum import CurriculumConfig
+from repro.core.exploration import (
+    SGEBank,
+    WREDistribution,
+    build_wre,
+    taylor_softmax,
+    weighted_sample_without_replacement,
+)
+from repro.core.greedy import GreedyResult, greedy, greedy_importance, sge, stochastic_greedy
+from repro.core.metadata import MiloMetadata, is_preprocessed
+from repro.core.milo import MiloPreprocessor, MiloSelector, preprocess_with_encoder
+from repro.core.similarity import gram_matrix, gram_matrix_blocked
+from repro.core.submodular import (
+    SetFunction,
+    disparity_min,
+    disparity_sum,
+    facility_location,
+    graph_cut,
+    make_graph_cut,
+)
+
+__all__ = [
+    "CurriculumConfig",
+    "GreedyResult",
+    "MiloMetadata",
+    "MiloPreprocessor",
+    "MiloSelector",
+    "SGEBank",
+    "SetFunction",
+    "WREDistribution",
+    "build_wre",
+    "disparity_min",
+    "disparity_sum",
+    "facility_location",
+    "gram_matrix",
+    "gram_matrix_blocked",
+    "graph_cut",
+    "greedy",
+    "greedy_importance",
+    "is_preprocessed",
+    "make_graph_cut",
+    "preprocess_with_encoder",
+    "sge",
+    "stochastic_greedy",
+    "taylor_softmax",
+    "weighted_sample_without_replacement",
+]

@@ -1,0 +1,67 @@
+"""Data-exploration strategies: SGE subset banks and WRE distributions.
+
+WRE (paper §3.1.2): greedy importance scores -> second-order Taylor-softmax
+(Eq. 5) -> multinomial distribution p over the dataset; every R epochs a new
+subset of size k is drawn from p *without replacement*.
+
+Sampling without replacement uses the Efraimidis–Spirakis exponentiated race
+in Gumbel form: ``top_k(log p + Gumbel)`` — a single fused device op (see
+DESIGN.md §2), mathematically identical to sequential weighted draws.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+def taylor_softmax(g: jax.Array, axis: int = -1) -> jax.Array:
+    """Second-order Taylor-softmax (paper Eq. 5): p_i ∝ 1 + g_i + g_i²/2.
+
+    Strictly positive for all real g (min value 0.5 at g = -1), so it is
+    well-defined for the negative marginal gains produced by disparity-min.
+    """
+    w = 1.0 + g + 0.5 * g * g
+    return w / jnp.sum(w, axis=axis, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def weighted_sample_without_replacement(
+    key: jax.Array, p: jax.Array, k: int
+) -> jax.Array:
+    """Draw k distinct indices with probabilities ∝ p (Gumbel top-k)."""
+    logp = jnp.log(jnp.maximum(p, 1e-30))
+    z = logp + jax.random.gumbel(key, p.shape)
+    _, idx = jax.lax.top_k(z, k)
+    return idx.astype(jnp.int32)
+
+
+class WREDistribution(NamedTuple):
+    """Multinomial sampling distribution over the dataset (global indices)."""
+
+    probs: jax.Array        # (m,) float32, sums to 1
+    importance: jax.Array   # (m,) raw greedy gains (diagnostics / metadata)
+
+    def sample(self, key: jax.Array, k: int) -> jax.Array:
+        return weighted_sample_without_replacement(key, self.probs, k)
+
+
+class SGEBank(NamedTuple):
+    """Pre-selected subset bank from SGE (global indices)."""
+
+    subsets: jax.Array  # (n_subsets, k) int32
+
+    @property
+    def n_subsets(self) -> int:
+        return int(self.subsets.shape[0])
+
+    def subset_for_epoch(self, epoch: int, R: int) -> jax.Array:
+        """Rotate through the bank every R epochs."""
+        return self.subsets[(epoch // max(R, 1)) % self.n_subsets]
+
+
+def build_wre(importance: jax.Array) -> WREDistribution:
+    imp = importance.astype(jnp.float32)
+    return WREDistribution(probs=taylor_softmax(imp), importance=imp)

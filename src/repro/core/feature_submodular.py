@@ -1,0 +1,162 @@
+"""Kernel-free (feature-based) submodular selection — the paper's stated
+future work (§5: "we will investigate feature-based submodular functions to
+avoid the need for similarity kernel construction").
+
+Instead of the m×m Gram matrix, every sample is represented by its
+similarity row to L ≪ m *landmarks* (k-means++ centers chosen on device):
+
+    Φ[i, l] = 0.5 + 0.5 · cos(z_i, c_l)            (m × L, not m × m)
+
+Facility location is then evaluated against the landmark set as the ground
+set being covered:  f(S) = Σ_l max_{j∈S} Φ[j, l]  — a Nyström-style
+approximation whose gains cost O(L) per candidate instead of O(m), giving
+O(m·L·k) total selection (vs O(m²·k)) and O(m·L) memory.  For class-wise
+partitioning this removes the paper's main memory complaint outright.
+
+Graph-cut gets the analogous treatment: colsum_j ≈ (m/L) Σ_l Φ[j, l] and the
+S×S penalty uses the landmark inner products as a low-rank kernel surrogate
+K̂ = Φ Φᵀ / L.
+
+Quality: tests/test_feature_submodular.py shows the landmark-FL greedy
+recovers ≥90% of the exact-FL objective at L = 4·k on clustered data.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.similarity import normalize_rows
+from repro.core.submodular import SetFunction
+
+
+def kmeans_pp_landmarks(key: jax.Array, z: jax.Array, n_landmarks: int,
+                        *, n_iters: int = 8) -> jax.Array:
+    """k-means++ init + a few Lloyd iterations, fully on device."""
+    m, d = z.shape
+    z = z.astype(jnp.float32)
+
+    def pp_step(carry, k_i):
+        centers, dist2 = carry
+        i, kk = k_i
+        # sample next center proportional to squared distance
+        p = dist2 / jnp.maximum(jnp.sum(dist2), 1e-12)
+        idx = jax.random.categorical(kk, jnp.log(jnp.maximum(p, 1e-30)))
+        c = z[idx]
+        centers = centers.at[i].set(c)
+        nd = jnp.sum((z - c) ** 2, axis=-1)
+        return (centers, jnp.minimum(dist2, nd)), None
+
+    k0, k1 = jax.random.split(key)
+    first = z[jax.random.randint(k0, (), 0, m)]
+    centers0 = jnp.zeros((n_landmarks, d), jnp.float32).at[0].set(first)
+    d0 = jnp.sum((z - first) ** 2, axis=-1)
+    keys = jax.random.split(k1, n_landmarks - 1)
+    (centers, _), _ = jax.lax.scan(
+        pp_step, (centers0, d0), (jnp.arange(1, n_landmarks), keys)
+    )
+
+    def lloyd(centers, _):
+        d2 = jnp.sum((z[:, None] - centers[None]) ** 2, axis=-1)  # (m, L)
+        assign = jnp.argmin(d2, axis=-1)
+        onehot = jax.nn.one_hot(assign, n_landmarks, dtype=jnp.float32)
+        counts = jnp.maximum(onehot.sum(0), 1.0)
+        new = (onehot.T @ z) / counts[:, None]
+        # keep empty clusters where they were
+        new = jnp.where((onehot.sum(0) > 0)[:, None], new, centers)
+        return new, None
+
+    centers, _ = jax.lax.scan(lloyd, centers, None, length=n_iters)
+    return centers
+
+
+@functools.partial(jax.jit, static_argnames=("n_landmarks",))
+def landmark_features(key: jax.Array, z: jax.Array, n_landmarks: int) -> jax.Array:
+    """Φ (m, L): rescaled-cosine similarity of every sample to each landmark."""
+    centers = kmeans_pp_landmarks(key, z, n_landmarks)
+    zn = normalize_rows(z.astype(jnp.float32))
+    cn = normalize_rows(centers)
+    return 0.5 + 0.5 * (zn @ cn.T)
+
+
+# --- feature-based facility location ---------------------------------------
+# state c[l] = max_{j in S} Φ[j, l]; gains(j) = Σ_l relu(Φ[j, l] - c[l]).
+# NOTE: the "K" argument threaded through the greedy engines is Φ here.
+
+def _ffl_init(phi: jax.Array):
+    return jnp.zeros((phi.shape[1],), phi.dtype)
+
+
+def _ffl_gains(c, phi: jax.Array) -> jax.Array:
+    return jnp.sum(jax.nn.relu(phi - c[None, :]), axis=1)
+
+
+def _ffl_update(c, phi: jax.Array, j: jax.Array):
+    return jnp.maximum(c, phi[j])
+
+
+def _ffl_eval(mask: jax.Array, phi: jax.Array) -> jax.Array:
+    sel = jnp.where(mask[:, None], phi, -jnp.inf)
+    best = jnp.max(sel, axis=0)
+    return jnp.sum(jnp.where(jnp.any(mask), best, 0.0))
+
+
+feature_facility_location = SetFunction(
+    name="feature_facility_location",
+    init=_ffl_init,
+    gains=_ffl_gains,
+    update=_ffl_update,
+    evaluate=_ffl_eval,
+)
+
+
+# --- feature-based graph cut -------------------------------------------------
+
+def make_feature_graph_cut(lam: float = 0.4) -> SetFunction:
+    """Graph-cut on the low-rank surrogate K̂ = Φ Φᵀ / L."""
+
+    def init(phi):
+        L = phi.shape[1]
+        colsum = phi @ (jnp.sum(phi, axis=0) / L)       # Σ_i K̂[i, j]
+        return {"colsum": colsum, "acc": jnp.zeros((phi.shape[1],), phi.dtype)}
+
+    def gains(state, phi):
+        L = phi.shape[1]
+        diag = jnp.sum(phi * phi, axis=1) / L
+        cur = phi @ state["acc"] / L                    # Σ_{i in S} K̂[i, j]
+        return state["colsum"] - lam * (2.0 * cur + diag)
+
+    def update(state, phi, j):
+        return {"colsum": state["colsum"], "acc": state["acc"] + phi[j]}
+
+    def evaluate(mask, phi):
+        L = phi.shape[1]
+        s = phi.T @ mask.astype(phi.dtype)              # Σ_{j in S} Φ[j]
+        total = jnp.sum(phi, axis=0)
+        return (total @ s) / L - lam * (s @ s) / L
+
+    return SetFunction("feature_graph_cut", init, gains, update, evaluate)
+
+
+feature_graph_cut = make_feature_graph_cut(0.4)
+
+
+class FeatureSelection(NamedTuple):
+    indices: jax.Array
+    phi: jax.Array
+
+
+def feature_greedy_select(
+    key: jax.Array, z: jax.Array, k: int, *, n_landmarks: int | None = None,
+    fn: SetFunction = feature_facility_location,
+):
+    """End-to-end kernel-free selection: landmarks -> Φ -> jit greedy."""
+    from repro.core.greedy import greedy
+
+    if n_landmarks is None:
+        n_landmarks = max(16, min(4 * k, z.shape[0] // 2))
+    phi = landmark_features(key, jnp.asarray(z), n_landmarks)
+    res = greedy(fn, phi, k)
+    return FeatureSelection(res.indices, phi)

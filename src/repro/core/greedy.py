@@ -1,0 +1,146 @@
+"""Greedy submodular maximization engines (paper Alg. 2 & 3), jit-compiled.
+
+Beyond-paper TPU adaptation: the reference implementation (submodlib) runs one
+Python/C++ heap iteration per selected element on the host.  Here an *entire*
+greedy run — all k steps, each with vectorized gain evaluation over every
+candidate — compiles to a single XLA program via ``lax.fori_loop``.  The
+stochastic-greedy candidate draw uses Gumbel top-k so no host round-trip or
+rejection loop is needed.
+
+Engines:
+  * ``greedy``            — lazy-free naive greedy (exact argmax each step).
+  * ``stochastic_greedy`` — [Mirzasoleiman et al. '15]; candidate set of size
+                            s = (n/k) * log(1/eps) per step (paper SGE inner).
+  * ``greedy_importance`` — full greedy pass over the ground set recording the
+                            marginal gain of every element at its inclusion
+                            point (paper Alg. 3, feeds WRE).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.submodular import SetFunction
+
+_NEG = -1e30
+
+
+class GreedyResult(NamedTuple):
+    indices: jax.Array  # (k,) int32 selected order
+    gains: jax.Array    # (k,) float32 marginal gain at inclusion
+
+
+def _masked_argmax(gains: jax.Array, selected: jax.Array) -> jax.Array:
+    return jnp.argmax(jnp.where(selected, _NEG, gains))
+
+
+@functools.partial(jax.jit, static_argnames=("fn", "k"))
+def greedy(fn: SetFunction, K: jax.Array, k: int) -> GreedyResult:
+    """Exact naive greedy: argmax of the full gain vector each step."""
+    n = K.shape[0]
+    state0 = fn.init(K)
+
+    def body(t, carry):
+        state, selected, idxs, gs = carry
+        gains = fn.gains(state, K)
+        j = _masked_argmax(gains, selected)
+        state = fn.update(state, K, j)
+        return (
+            state,
+            selected.at[j].set(True),
+            idxs.at[t].set(j.astype(jnp.int32)),
+            gs.at[t].set(gains[j].astype(jnp.float32)),
+        )
+
+    carry = (
+        state0,
+        jnp.zeros((n,), bool),
+        jnp.zeros((k,), jnp.int32),
+        jnp.zeros((k,), jnp.float32),
+    )
+    _, _, idxs, gs = jax.lax.fori_loop(0, k, body, carry)
+    return GreedyResult(idxs, gs)
+
+
+def stochastic_candidate_count(n: int, k: int, eps: float) -> int:
+    """s = ceil((n/k) * ln(1/eps)), clipped to [1, n]."""
+    return max(1, min(n, math.ceil((n / max(k, 1)) * math.log(1.0 / eps))))
+
+
+@functools.partial(jax.jit, static_argnames=("fn", "k", "s"))
+def stochastic_greedy(
+    fn: SetFunction, K: jax.Array, k: int, key: jax.Array, *, s: int
+) -> GreedyResult:
+    """Stochastic greedy (paper Alg. 2 inner loop).
+
+    Per step, a candidate set of size ``s`` is drawn uniformly from the
+    unselected ground set via Gumbel top-k on masked uniform logits, then the
+    best candidate by marginal gain is added.
+    """
+    n = K.shape[0]
+    state0 = fn.init(K)
+    keys = jax.random.split(key, k)
+
+    def body(t, carry):
+        state, selected, idxs, gs = carry
+        # Gumbel top-s over unselected == uniform sample w/o replacement.
+        g = jax.random.gumbel(keys[t], (n,))
+        logits = jnp.where(selected, _NEG, g)
+        _, cand = jax.lax.top_k(logits, s)  # (s,) candidate indices
+        gains = fn.gains(state, K)          # vectorized over all n; gather s
+        cand_gains = gains[cand]
+        best = cand[jnp.argmax(cand_gains)]
+        state = fn.update(state, K, best)
+        return (
+            state,
+            selected.at[best].set(True),
+            idxs.at[t].set(best.astype(jnp.int32)),
+            gs.at[t].set(jnp.max(cand_gains).astype(jnp.float32)),
+        )
+
+    carry = (
+        state0,
+        jnp.zeros((n,), bool),
+        jnp.zeros((k,), jnp.int32),
+        jnp.zeros((k,), jnp.float32),
+    )
+    _, _, idxs, gs = jax.lax.fori_loop(0, k, body, carry)
+    return GreedyResult(idxs, gs)
+
+
+@functools.partial(jax.jit, static_argnames=("fn",))
+def greedy_importance(fn: SetFunction, K: jax.Array) -> jax.Array:
+    """Paper Alg. 3: full greedy over the whole ground set.
+
+    Returns ``g`` with ``g[e]`` = marginal gain of element ``e`` at the moment
+    it was greedily included (its WRE importance score).
+    """
+    n = K.shape[0]
+    res = greedy(fn, K, n)
+    g = jnp.zeros((n,), jnp.float32)
+    return g.at[res.indices].set(res.gains)
+
+
+def sge(
+    fn: SetFunction,
+    K: jax.Array,
+    k: int,
+    key: jax.Array,
+    *,
+    n_subsets: int,
+    eps: float = 0.01,
+) -> jax.Array:
+    """Paper Alg. 2 (SGE): run stochastic greedy ``n_subsets`` times.
+
+    Returns an ``(n_subsets, k)`` int32 array of selected indices.  Each run
+    is an independent stochastic-greedy maximization; randomness of the
+    candidate draws yields distinct near-optimal subsets.
+    """
+    s = stochastic_candidate_count(K.shape[0], k, eps)
+    keys = jax.random.split(key, n_subsets)
+    runs = [stochastic_greedy(fn, K, k, kk, s=s).indices for kk in keys]
+    return jnp.stack(runs, axis=0)

@@ -1,0 +1,74 @@
+"""Persisted MILO metadata (paper Alg. 1 ``storemetadata``/``loadmetadata``).
+
+The whole point of model-agnostic selection is that this artifact is computed
+once per (dataset, subset-size) and shared across every downstream model and
+tuning trial.  Stored as a single ``.npz`` with a JSON config sidecar field;
+writes are atomic (temp file + rename) so a crashed preprocessing job can
+never leave a half-written artifact behind.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import tempfile
+from typing import Any
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class MiloMetadata:
+    """Pre-processing output for one (dataset, k) pair."""
+
+    sge_subsets: np.ndarray      # (n_subsets, k) int64 global indices
+    wre_probs: np.ndarray        # (m,) float32, sums to 1
+    wre_importance: np.ndarray   # (m,) float32 raw greedy gains
+    class_labels: np.ndarray     # (m,) int64 (zeros if unlabeled)
+    class_budgets: np.ndarray    # (c,) int64 per-class budget (== [k] if global)
+    config: dict[str, Any]       # provenance: set fns, eps, fraction, encoder id
+
+    @property
+    def k(self) -> int:
+        return int(self.sge_subsets.shape[1])
+
+    @property
+    def m(self) -> int:
+        return int(self.wre_probs.shape[0])
+
+    def save(self, path: str) -> None:
+        d = os.path.dirname(os.path.abspath(path))
+        os.makedirs(d, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=d, suffix=".npz.tmp")
+        try:
+            with os.fdopen(fd, "wb") as f:
+                np.savez(
+                    f,
+                    sge_subsets=self.sge_subsets,
+                    wre_probs=self.wre_probs,
+                    wre_importance=self.wre_importance,
+                    class_labels=self.class_labels,
+                    class_budgets=self.class_budgets,
+                    config=np.frombuffer(json.dumps(self.config).encode(), dtype=np.uint8),
+                )
+            os.replace(tmp, path)
+        finally:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+
+    @classmethod
+    def load(cls, path: str) -> "MiloMetadata":
+        with np.load(path) as z:
+            cfg = json.loads(bytes(z["config"].tobytes()).decode())
+            return cls(
+                sge_subsets=z["sge_subsets"],
+                wre_probs=z["wre_probs"],
+                wre_importance=z["wre_importance"],
+                class_labels=z["class_labels"],
+                class_budgets=z["class_budgets"],
+                config=cfg,
+            )
+
+
+def is_preprocessed(path: str) -> bool:
+    return os.path.exists(path)

@@ -1,0 +1,186 @@
+"""MILO orchestrator (paper Alg. 1): preprocessing + per-epoch subset serving.
+
+``MiloPreprocessor.preprocess`` runs once per (dataset, k):
+  1. class-wise partition of the feature matrix,
+  2. per class: Gram matrix -> SGE with graph-cut (easy subsets bank),
+  3. per class: full greedy with disparity-min -> importance -> Taylor-softmax
+     probabilities (WRE),
+  4. merge to global indices; persist as ``MiloMetadata``.
+
+``MiloSelector`` consumes the metadata during training: given the epoch it
+returns the subset indices dictated by the easy-to-hard curriculum.  Selection
+cost during training is O(k) (a Gumbel top-k at WRE epochs; a table lookup at
+SGE epochs) — the decoupling that gives the paper its 3-75x speedups.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.greedy import greedy_importance, sge as run_sge
+from repro.core import submodular
+from repro.core.curriculum import CurriculumConfig
+from repro.core.exploration import taylor_softmax, weighted_sample_without_replacement
+from repro.core.metadata import MiloMetadata
+from repro.core.partition import Partition, merge_class_selections, partition_by_class, proportional_budgets
+from repro.core.similarity import gram_matrix_blocked
+
+
+@dataclasses.dataclass
+class MiloPreprocessor:
+    """One-shot, model-agnostic pre-processing (paper §3.1-3.2)."""
+
+    subset_fraction: float = 0.1
+    n_sge_subsets: int = 8          # size of the easy-subset bank
+    eps: float = 0.01               # stochastic-greedy epsilon (paper value)
+    easy_fn: str = "graph_cut"      # SGE set function (paper: graph-cut)
+    hard_fn: str = "disparity_min"  # WRE set function (paper: disparity-min)
+    graph_cut_lambda: float = 0.4   # paper value
+    classwise: bool = True
+    metric: str = "cosine"
+    gram_block: int = 2048
+    use_pallas: bool = False        # route Gram tiles through the Pallas kernel
+
+    def _set_fn(self, name: str) -> submodular.SetFunction:
+        if name == "graph_cut":
+            return submodular.make_graph_cut(self.graph_cut_lambda)
+        return submodular.get(name)
+
+    def preprocess(
+        self,
+        features: np.ndarray,
+        labels: np.ndarray | None,
+        key: jax.Array,
+        *,
+        encoder_id: str = "precomputed",
+    ) -> MiloMetadata:
+        features = np.asarray(features)
+        m = features.shape[0]
+        k = max(1, int(round(self.subset_fraction * m)))
+        if labels is None or not self.classwise:
+            labels_arr = np.zeros((m,), np.int64) if labels is None else np.asarray(labels, np.int64)
+            parts = [Partition(0, np.arange(m, dtype=np.int64))]
+        else:
+            labels_arr = np.asarray(labels, np.int64)
+            parts = partition_by_class(labels_arr)
+        budgets = proportional_budgets(parts, k)
+
+        easy = self._set_fn(self.easy_fn)
+        hard = self._set_fn(self.hard_fn)
+
+        per_class_sge: list[np.ndarray] = []  # each (n_subsets, k_c) local idx
+        wre_probs = np.zeros((m,), np.float32)
+        wre_importance = np.zeros((m,), np.float32)
+
+        for part, k_c in zip(parts, budgets):
+            key, k_sge = jax.random.split(key)
+            z = jnp.asarray(features[part.indices])
+            K = gram_matrix_blocked(
+                z, metric=self.metric, block=self.gram_block, use_pallas=self.use_pallas
+            )
+            n_c = len(part.indices)
+            if k_c <= 0:
+                per_class_sge.append(np.zeros((self.n_sge_subsets, 0), np.int64))
+                imp = np.zeros((n_c,), np.float32)
+            else:
+                subs = run_sge(easy, K, k_c, k_sge, n_subsets=self.n_sge_subsets, eps=self.eps)
+                per_class_sge.append(np.asarray(subs, np.int64))
+                imp = np.asarray(greedy_importance(hard, K), np.float32)
+            wre_importance[part.indices] = imp
+            # Within-class Taylor-softmax, weighted by class mass so the global
+            # vector is a proper distribution with stratified expectation.
+            p_local = np.asarray(taylor_softmax(jnp.asarray(imp)), np.float32)
+            wre_probs[part.indices] = p_local * (n_c / m)
+
+        wre_probs = wre_probs / wre_probs.sum()
+        sge_subsets = np.stack(
+            [
+                merge_class_selections(parts, [s[i] for s in per_class_sge])
+                for i in range(self.n_sge_subsets)
+            ],
+            axis=0,
+        )
+        return MiloMetadata(
+            sge_subsets=sge_subsets,
+            wre_probs=wre_probs,
+            wre_importance=wre_importance,
+            class_labels=labels_arr,
+            class_budgets=np.asarray(budgets, np.int64),
+            config=dict(
+                subset_fraction=self.subset_fraction,
+                k=int(sge_subsets.shape[1]),
+                n_sge_subsets=self.n_sge_subsets,
+                eps=self.eps,
+                easy_fn=self.easy_fn,
+                hard_fn=self.hard_fn,
+                graph_cut_lambda=self.graph_cut_lambda,
+                classwise=self.classwise,
+                metric=self.metric,
+                encoder_id=encoder_id,
+            ),
+        )
+
+
+@dataclasses.dataclass
+class MiloSelector:
+    """Per-epoch subset server driven by the curriculum (paper Alg. 1)."""
+
+    metadata: MiloMetadata
+    curriculum: CurriculumConfig
+    seed: int = 0
+
+    def __post_init__(self):
+        self._cache_epoch: int = -1
+        self._cache: np.ndarray | None = None
+
+    @property
+    def k(self) -> int:
+        return self.metadata.k
+
+    def indices_for_epoch(self, epoch: int) -> np.ndarray:
+        """Subset (global indices) to train on at ``epoch``.
+
+        Deterministic in (seed, epoch) so fault-tolerant restarts replay the
+        identical data order (see distributed/fault_tolerance.py).
+        """
+        if epoch == self._cache_epoch and self._cache is not None:
+            return self._cache
+        cur = self.curriculum
+        if cur.phase(epoch) == "sge":
+            slot = (epoch // cur.R) % self.metadata.sge_subsets.shape[0]
+            idx = self.metadata.sge_subsets[slot]
+        else:
+            # One fresh WRE draw per R-epoch window, keyed by (seed, window).
+            window = (epoch - cur.sge_epochs) // cur.R
+            key = jax.random.fold_in(jax.random.PRNGKey(self.seed), window)
+            idx = np.asarray(
+                weighted_sample_without_replacement(
+                    key, jnp.asarray(self.metadata.wre_probs), self.k
+                ),
+                np.int64,
+            )
+        self._cache_epoch, self._cache = epoch, idx
+        return idx
+
+
+def preprocess_with_encoder(
+    encode_fn: Callable[[np.ndarray], np.ndarray],
+    inputs: np.ndarray,
+    labels: np.ndarray | None,
+    key: jax.Array,
+    *,
+    batch_size: int = 256,
+    encoder_id: str = "custom",
+    **pre_kwargs,
+) -> MiloMetadata:
+    """Encode inputs in batches with a frozen encoder, then preprocess."""
+    feats = []
+    for lo in range(0, len(inputs), batch_size):
+        feats.append(np.asarray(encode_fn(inputs[lo : lo + batch_size])))
+    features = np.concatenate(feats, axis=0)
+    pre = MiloPreprocessor(**pre_kwargs)
+    return pre.preprocess(features, labels, key, encoder_id=encoder_id)

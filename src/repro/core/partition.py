@@ -1,0 +1,72 @@
+"""Class-wise data partitioning (paper §3.2).
+
+Building the m x m similarity kernel is memory-prohibitive for large m; the
+paper partitions the dataset by class label, runs selection within each class,
+and merges.  For a balanced dataset with c classes this cuts kernel memory by
+c².  Budgets are apportioned proportionally to class sizes (largest-remainder
+rounding so the total is exactly k).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import numpy as np
+
+
+class Partition(NamedTuple):
+    """One class shard: global indices of its members."""
+
+    label: int
+    indices: np.ndarray  # (n_c,) int64 global indices
+
+
+def partition_by_class(labels: np.ndarray) -> list[Partition]:
+    labels = np.asarray(labels)
+    parts = []
+    for lab in np.unique(labels):
+        parts.append(Partition(int(lab), np.nonzero(labels == lab)[0]))
+    return parts
+
+
+def proportional_budgets(parts: Sequence[Partition], k: int) -> list[int]:
+    """Largest-remainder apportionment of budget k across partitions.
+
+    Guarantees: sum == k, each budget <= partition size, budget >= 1 for any
+    non-empty partition when k >= len(parts).
+    """
+    sizes = np.array([len(p.indices) for p in parts], dtype=np.float64)
+    m = sizes.sum()
+    if m == 0:
+        return [0] * len(parts)
+    k = min(k, int(m))
+    quotas = sizes * (k / m)
+    floors = np.floor(quotas).astype(np.int64)
+    floors = np.minimum(floors, sizes.astype(np.int64))
+    remainder = k - int(floors.sum())
+    # Distribute leftovers by largest fractional part, respecting capacity.
+    frac = quotas - np.floor(quotas)
+    order = np.argsort(-frac)
+    budgets = floors.copy()
+    for idx in order:
+        if remainder <= 0:
+            break
+        if budgets[idx] < sizes[idx]:
+            budgets[idx] += 1
+            remainder -= 1
+    # If capacity-limited partitions blocked some leftovers, spill anywhere.
+    i = 0
+    while remainder > 0 and i < len(parts):
+        room = int(sizes[i]) - int(budgets[i])
+        take = min(room, remainder)
+        budgets[i] += take
+        remainder -= take
+        i += 1
+    return [int(b) for b in budgets]
+
+
+def merge_class_selections(
+    parts: Sequence[Partition], local_selections: Sequence[np.ndarray]
+) -> np.ndarray:
+    """Map per-class local indices back to global dataset indices."""
+    out = [np.asarray(p.indices)[np.asarray(sel)] for p, sel in zip(parts, local_selections)]
+    return np.concatenate(out) if out else np.zeros((0,), np.int64)

@@ -1,0 +1,197 @@
+"""Set functions from the paper (App. D), in incremental-gain form.
+
+Each set function is expressed as a triple of pure functions over a fixed
+similarity matrix ``K`` (shape ``(n, n)``, values in [0, 1]):
+
+    init(K)              -> state                       (pytree of arrays)
+    gains(state, K)      -> (n,) marginal gains f(S u j) - f(S) for every j
+    update(state, K, j)  -> state after adding j to S
+
+This formulation turns greedy maximization into a jit-compiled
+``lax.fori_loop`` with *vectorized* gain evaluation — the TPU-native
+replacement for submodlib's per-element CPU heaps (see DESIGN.md §2).
+
+Functions:
+  * facility_location  (representation, submodular monotone)
+  * graph_cut          (representation, submodular monotone for lam <= 0.5)
+  * disparity_sum      (diversity, non-submodular; greedy gives 1/4 approx)
+  * disparity_min      (diversity, non-submodular; greedy gives 1/2 approx)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+State = Any
+
+# Large-but-finite stand-in for +inf so disparity-min stays NaN-free.
+_DMIN_CAP = 2.0
+
+
+@dataclasses.dataclass(frozen=True)
+class SetFunction:
+    """Incremental set-function interface (see module docstring)."""
+
+    name: str
+    init: Callable[[jax.Array], State]
+    gains: Callable[[State, jax.Array], jax.Array]
+    update: Callable[[State, jax.Array, jax.Array], State]
+    # Evaluate f(S) from scratch for a boolean mask — used by tests/property
+    # checks, not by the greedy loop.
+    evaluate: Callable[[jax.Array, jax.Array], jax.Array]
+
+
+# ---------------------------------------------------------------------------
+# Facility location:  f(S) = sum_i max_{j in S} K_ij
+# state: c[i] = max_{j in S} K_ij  (0 for empty S since K >= 0)
+# gain(j) = sum_i relu(K_ij - c_i)
+# ---------------------------------------------------------------------------
+
+def _fl_init(K: jax.Array) -> State:
+    return jnp.zeros((K.shape[0],), K.dtype)
+
+
+def _fl_gains(c: State, K: jax.Array) -> jax.Array:
+    return jnp.sum(jax.nn.relu(K - c[:, None]), axis=0)
+
+
+def _fl_update(c: State, K: jax.Array, j: jax.Array) -> State:
+    return jnp.maximum(c, K[:, j])
+
+
+def _fl_eval(mask: jax.Array, K: jax.Array) -> jax.Array:
+    sel = jnp.where(mask[None, :], K, -jnp.inf)
+    best = jnp.max(sel, axis=1)
+    return jnp.sum(jnp.where(jnp.any(mask), best, 0.0))
+
+
+facility_location = SetFunction(
+    name="facility_location",
+    init=_fl_init,
+    gains=_fl_gains,
+    update=_fl_update,
+    evaluate=_fl_eval,
+)
+
+
+# ---------------------------------------------------------------------------
+# Graph cut: f(S) = sum_{i in D} sum_{j in S} K_ij - lam * sum_{i,j in S} K_ij
+# state: (colsum (static), cur[j] = sum_{i in S} K_ij)
+# gain(j) = colsum_j - lam * (2 cur_j + K_jj)
+# ---------------------------------------------------------------------------
+
+def make_graph_cut(lam: float = 0.4) -> SetFunction:
+    def init(K: jax.Array) -> State:
+        return {"colsum": jnp.sum(K, axis=0), "cur": jnp.zeros((K.shape[0],), K.dtype)}
+
+    def gains(state: State, K: jax.Array) -> jax.Array:
+        return state["colsum"] - lam * (2.0 * state["cur"] + jnp.diagonal(K))
+
+    def update(state: State, K: jax.Array, j: jax.Array) -> State:
+        return {"colsum": state["colsum"], "cur": state["cur"] + K[:, j]}
+
+    def evaluate(mask: jax.Array, K: jax.Array) -> jax.Array:
+        m = mask.astype(K.dtype)
+        return jnp.sum(K @ m) - lam * (m @ K @ m)
+
+    return SetFunction("graph_cut", init, gains, update, evaluate)
+
+
+graph_cut = make_graph_cut(0.4)
+
+
+# ---------------------------------------------------------------------------
+# Disparity-sum: f(S) = sum_{i,j in S} (1 - K_ij)
+# state: cur[j] = sum_{i in S} (1 - K_ij);  gain(j) = 2 * cur_j  (diag is 0)
+# ---------------------------------------------------------------------------
+
+def _ds_init(K: jax.Array) -> State:
+    return jnp.zeros((K.shape[0],), K.dtype)
+
+
+def _ds_gains(cur: State, K: jax.Array) -> jax.Array:
+    return 2.0 * cur
+
+
+def _ds_update(cur: State, K: jax.Array, j: jax.Array) -> State:
+    return cur + (1.0 - K[:, j])
+
+
+def _ds_eval(mask: jax.Array, K: jax.Array) -> jax.Array:
+    m = mask.astype(K.dtype)
+    return m @ (1.0 - K) @ m - jnp.sum(m * (1.0 - jnp.diagonal(K)))
+
+
+disparity_sum = SetFunction("disparity_sum", _ds_init, _ds_gains, _ds_update, _ds_eval)
+
+
+# ---------------------------------------------------------------------------
+# Disparity-min: f(S) = min_{i != j in S} (1 - K_ij)
+# state: (dmin[j] = min_{i in S} (1 - K_ij), cur = f(S), size)
+# Greedy argmax on gains == farthest-point traversal.
+# ---------------------------------------------------------------------------
+
+def _dm_init(K: jax.Array) -> State:
+    n = K.shape[0]
+    return {
+        "dmin": jnp.full((n,), _DMIN_CAP, K.dtype),
+        "cur": jnp.asarray(_DMIN_CAP, K.dtype),
+        "size": jnp.asarray(0, jnp.int32),
+    }
+
+
+def _dm_gains(state: State, K: jax.Array) -> jax.Array:
+    new_f = jnp.minimum(state["cur"], state["dmin"])
+    return new_f - state["cur"]
+
+
+def _dm_update(state: State, K: jax.Array, j: jax.Array) -> State:
+    dist_j = 1.0 - K[:, j]
+    new_cur = jnp.where(state["size"] >= 1, jnp.minimum(state["cur"], state["dmin"][j]), state["cur"])
+    dmin = jnp.minimum(state["dmin"], dist_j)
+    return {"dmin": dmin, "cur": new_cur, "size": state["size"] + 1}
+
+
+def _dm_eval(mask: jax.Array, K: jax.Array) -> jax.Array:
+    n = K.shape[0]
+    d = 1.0 - K
+    pair = mask[:, None] & mask[None, :] & ~jnp.eye(n, dtype=bool)
+    return jnp.min(jnp.where(pair, d, _DMIN_CAP))
+
+
+disparity_min = SetFunction("disparity_min", _dm_init, _dm_gains, _dm_update, _dm_eval)
+
+
+def make_facility_location_pallas(*, interpret: bool = False,
+                                  block_i: int = 512, block_j: int = 512) -> SetFunction:
+    """Facility location with the Pallas ``fl_gains`` kernel as the gain
+    engine (the O(n²)-per-step hot loop of greedy selection; DESIGN.md §6).
+
+    TPU deployment path; ``interpret=True`` validates on CPU (slow — tests
+    use small n).  Semantics identical to ``facility_location``
+    (tests/test_kernels.py proves greedy-trajectory equality).
+    """
+    from repro.kernels.fl_gains import ops as fl_ops
+
+    def gains(c: State, K: jax.Array) -> jax.Array:
+        return fl_ops.fl_gains(K, c, block_i=block_i, block_j=block_j,
+                               interpret=interpret)
+
+    return SetFunction("facility_location_pallas", _fl_init, gains, _fl_update, _fl_eval)
+
+
+REGISTRY = {
+    "facility_location": facility_location,
+    "graph_cut": graph_cut,
+    "disparity_sum": disparity_sum,
+    "disparity_min": disparity_min,
+}
+
+
+def get(name: str, **kwargs) -> SetFunction:
+    if name == "graph_cut" and kwargs:
+        return make_graph_cut(**kwargs)
+    return REGISTRY[name]

@@ -1,0 +1,89 @@
+"""Sharded input pipeline with first-class subset selection.
+
+The pipeline owns the *index stream*: each epoch it asks its ``selector``
+(MILO, a baseline, or full-data) for the sample indices to visit, shuffles
+deterministically in (seed, epoch), tiles into global batches, and yields
+host arrays ready for ``jax.device_put`` onto the (pod, data)-sharded batch
+axis.  Everything is a pure function of (seed, epoch, step) — the property
+fault-tolerant restart relies on (distributed/fault_tolerance.py).
+
+Background prefetch: a one-slot daemon thread overlaps host batch assembly
+with device compute.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from typing import Any, Callable, Iterator, Protocol
+
+import numpy as np
+
+
+class Selector(Protocol):
+    def indices_for_epoch(self, epoch: int) -> np.ndarray: ...
+
+
+@dataclasses.dataclass
+class FullSelector:
+    """No selection: the whole dataset every epoch."""
+
+    n: int
+
+    def indices_for_epoch(self, epoch: int) -> np.ndarray:
+        return np.arange(self.n, dtype=np.int64)
+
+
+@dataclasses.dataclass
+class Pipeline:
+    make_batch: Callable[[np.ndarray], dict]   # indices -> host batch dict
+    selector: Any
+    batch_size: int
+    seed: int = 0
+    drop_remainder: bool = True
+    prefetch: bool = True
+
+    def epoch_indices(self, epoch: int) -> np.ndarray:
+        idx = np.asarray(self.selector.indices_for_epoch(epoch), np.int64)
+        rng = np.random.default_rng(self.seed * 1_000_003 + epoch)
+        return rng.permutation(idx)
+
+    def steps_per_epoch(self, epoch: int = 0) -> int:
+        n = len(self.epoch_indices(epoch))
+        return n // self.batch_size if self.drop_remainder else -(-n // self.batch_size)
+
+    def epoch(self, epoch: int, *, start_step: int = 0) -> Iterator[dict]:
+        """Yield batches; ``start_step`` skips ahead for restart replay."""
+        idx = self.epoch_indices(epoch)
+        n_steps = self.steps_per_epoch(epoch)
+
+        def gen():
+            for s in range(start_step, n_steps):
+                lo = s * self.batch_size
+                sel = idx[lo : lo + self.batch_size]
+                if len(sel) < self.batch_size:
+                    if self.drop_remainder:
+                        return
+                    sel = np.pad(sel, (0, self.batch_size - len(sel)), mode="wrap")
+                yield self.make_batch(sel)
+
+        if not self.prefetch:
+            yield from gen()
+            return
+        q: queue.Queue = queue.Queue(maxsize=2)
+        _SENTINEL = object()
+
+        def worker():
+            try:
+                for b in gen():
+                    q.put(b)
+            finally:
+                q.put(_SENTINEL)
+
+        t = threading.Thread(target=worker, daemon=True)
+        t.start()
+        while True:
+            b = q.get()
+            if b is _SENTINEL:
+                break
+            yield b

@@ -1,0 +1,102 @@
+"""Gradient compression for the slow (cross-pod / DCI) axis.
+
+Two schemes, both with *error feedback* so compression noise does not bias
+the optimizer ([Seide'14, Karimireddy'19]):
+
+  * int8 stochastic-uniform quantization (8x over f32, 4x over bf16),
+  * top-k magnitude sparsification (configurable density).
+
+The trainer applies compression only to the cross-pod all-reduce: grads are
+reduce-scattered at full precision inside a pod (fast ICI), compressed for
+the pod axis, decompressed, and applied.  All ops are jit-compatible.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Int8Compressed(NamedTuple):
+    q: jax.Array       # int8 payload
+    scale: jax.Array   # per-tensor scale ()
+
+
+def int8_compress(x: jax.Array, key: jax.Array | None = None) -> Int8Compressed:
+    """Symmetric per-tensor int8 quantization (stochastic if key given)."""
+    x32 = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(x32)), 1e-12) / 127.0
+    y = x32 / scale
+    if key is not None:
+        y = y + jax.random.uniform(key, y.shape, minval=-0.5, maxval=0.5)
+    q = jnp.clip(jnp.round(y), -127, 127).astype(jnp.int8)
+    return Int8Compressed(q, scale)
+
+
+def int8_decompress(c: Int8Compressed, dtype=jnp.float32) -> jax.Array:
+    return (c.q.astype(jnp.float32) * c.scale).astype(dtype)
+
+
+def topk_compress(x: jax.Array, density: float) -> tuple[jax.Array, jax.Array]:
+    """Keep the top ``density`` fraction by magnitude; returns (values, idx)."""
+    flat = x.reshape(-1).astype(jnp.float32)
+    k = max(1, int(flat.shape[0] * density))
+    vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+    return flat[idx], idx
+
+
+def topk_decompress(vals: jax.Array, idx: jax.Array, shape, dtype=jnp.float32) -> jax.Array:
+    n = 1
+    for s in shape:
+        n *= s
+    out = jnp.zeros((n,), jnp.float32).at[idx].set(vals)
+    return out.reshape(shape).astype(dtype)
+
+
+class ErrorFeedbackState(NamedTuple):
+    residual: Any  # pytree matching grads
+
+
+def init_error_feedback(grads: Any) -> ErrorFeedbackState:
+    return ErrorFeedbackState(jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32), grads))
+
+
+def compress_with_feedback(
+    grads: Any,
+    ef: ErrorFeedbackState,
+    *,
+    scheme: str = "int8",
+    density: float = 0.01,
+    key: jax.Array | None = None,
+) -> tuple[Any, ErrorFeedbackState]:
+    """Compress+decompress each leaf, accumulating the residual locally.
+
+    Returns the *decompressed* gradient (what the collective would deliver)
+    and the new residual state.  In deployment the compressed payload is what
+    crosses the DCI; the math here is exactly what every pod applies.
+    """
+
+    def one(g, r):
+        g32 = g.astype(jnp.float32) + r
+        if scheme == "int8":
+            c = int8_compress(g32, key)
+            out = int8_decompress(c)
+        elif scheme == "topk":
+            vals, idx = topk_compress(g32, density)
+            out = topk_decompress(vals, idx, g32.shape)
+        else:
+            raise ValueError(scheme)
+        return out.astype(g.dtype), g32 - out
+
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_r = jax.tree_util.tree_leaves(ef.residual)
+    outs, resids = [], []
+    for g, r in zip(flat_g, flat_r):
+        o, nr = one(g, r)
+        outs.append(o)
+        resids.append(nr)
+    return (
+        jax.tree_util.tree_unflatten(tdef, outs),
+        ErrorFeedbackState(jax.tree_util.tree_unflatten(tdef, resids)),
+    )

@@ -1,0 +1,75 @@
+"""Sentence-transformer-style text encoder (paper: all-distilroberta-v1).
+
+Mean-pooled final-layer token embeddings, as in SBERT — the paper's text
+feature representation.  Architecture in JAX; weights are deployment
+artifacts (offline container), with the proxy path covering validation.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense, init_dense, init_embedding, layer_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class TextEncoderConfig:
+    vocab_size: int = 50265
+    max_len: int = 512
+    d_model: int = 768
+    num_layers: int = 6      # distilroberta
+    num_heads: int = 12
+    d_ff: int = 3072
+
+
+def init_text_encoder(key: jax.Array, cfg: TextEncoderConfig) -> dict:
+    ke, kp, kl = jax.random.split(key, 3)
+
+    def init_layer(lk):
+        k1, k2, k3, k4 = jax.random.split(lk, 4)
+        return {
+            "ln1_s": jnp.ones((cfg.d_model,)), "ln1_b": jnp.zeros((cfg.d_model,)),
+            "wqkv": init_dense(k1, cfg.d_model, 3 * cfg.d_model, jnp.float32),
+            "wo": init_dense(k2, cfg.d_model, cfg.d_model, jnp.float32),
+            "ln2_s": jnp.ones((cfg.d_model,)), "ln2_b": jnp.zeros((cfg.d_model,)),
+            "w1": init_dense(k3, cfg.d_model, cfg.d_ff, jnp.float32),
+            "w2": init_dense(k4, cfg.d_ff, cfg.d_model, jnp.float32),
+        }
+
+    return {
+        "tok": init_embedding(ke, cfg.vocab_size, cfg.d_model, jnp.float32),
+        "pos": jax.random.normal(kp, (1, cfg.max_len, cfg.d_model)) * 0.02,
+        "layers": jax.vmap(init_layer)(jax.random.split(kl, cfg.num_layers)),
+        "ln_f_s": jnp.ones((cfg.d_model,)), "ln_f_b": jnp.zeros((cfg.d_model,)),
+    }
+
+
+def text_encode(params: dict, tokens: jax.Array, cfg: TextEncoderConfig,
+                mask: jax.Array | None = None) -> jax.Array:
+    """tokens: (B, S) int32 -> (B, d_model) mean-pooled embeddings."""
+    b, s = tokens.shape
+    if mask is None:
+        mask = jnp.ones((b, s), jnp.float32)
+    x = jnp.take(params["tok"], tokens, axis=0) + params["pos"][:, :s]
+
+    def body(x, lp):
+        h = layer_norm(x, lp["ln1_s"], lp["ln1_b"])
+        d = x.shape[-1]
+        nh = cfg.num_heads
+        qkv = dense(h, lp["wqkv"]).reshape(b, s, 3, nh, d // nh)
+        q, k, v = qkv[:, :, 0], qkv[:, :, 1], qkv[:, :, 2]
+        logits = jnp.einsum("bqhd,bkhd->bhqk", q, k) / ((d // nh) ** 0.5)
+        logits = jnp.where(mask[:, None, None, :] > 0, logits, -1e30)
+        a = jax.nn.softmax(logits, -1)
+        attn = jnp.einsum("bhqk,bkhd->bqhd", a, v).reshape(b, s, d)
+        x = x + dense(attn, lp["wo"])
+        h = layer_norm(x, lp["ln2_s"], lp["ln2_b"])
+        x = x + dense(jax.nn.gelu(dense(h, lp["w1"])), lp["w2"])
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    x = layer_norm(x, params["ln_f_s"], params["ln_f_b"])
+    denom = jnp.maximum(mask.sum(-1, keepdims=True), 1.0)
+    return (x * mask[..., None]).sum(1) / denom  # SBERT mean pooling

@@ -1,0 +1,86 @@
+"""DINO-style ViT feature encoder (paper's vision encoder, in JAX).
+
+The paper uses DINO-ViT-B/16's final-layer CLS embedding as the frozen
+feature representation.  We implement the architecture; pretrained weights
+are a deployment artifact (this container is offline) — the proxy-encoder
+path (paper App. H.2) covers validation, and tests exercise shape/semantics
+with random weights.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense, init_dense, layer_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class ViTConfig:
+    image_size: int = 224
+    patch_size: int = 16
+    d_model: int = 768
+    num_layers: int = 12
+    num_heads: int = 12
+    d_ff: int = 3072
+
+    @property
+    def n_patches(self) -> int:
+        return (self.image_size // self.patch_size) ** 2
+
+
+def init_vit(key: jax.Array, cfg: ViTConfig) -> dict:
+    kp, kc, kpos, kl, kn = jax.random.split(key, 5)
+    patch_dim = 3 * cfg.patch_size ** 2
+
+    def init_layer(lk):
+        k1, k2, k3, k4 = jax.random.split(lk, 4)
+        return {
+            "ln1_s": jnp.ones((cfg.d_model,)), "ln1_b": jnp.zeros((cfg.d_model,)),
+            "wqkv": init_dense(k1, cfg.d_model, 3 * cfg.d_model, jnp.float32),
+            "wo": init_dense(k2, cfg.d_model, cfg.d_model, jnp.float32),
+            "ln2_s": jnp.ones((cfg.d_model,)), "ln2_b": jnp.zeros((cfg.d_model,)),
+            "w1": init_dense(k3, cfg.d_model, cfg.d_ff, jnp.float32),
+            "w2": init_dense(k4, cfg.d_ff, cfg.d_model, jnp.float32),
+        }
+
+    return {
+        "patch_proj": init_dense(kp, patch_dim, cfg.d_model, jnp.float32),
+        "cls": jax.random.normal(kc, (1, 1, cfg.d_model)) * 0.02,
+        "pos": jax.random.normal(kpos, (1, cfg.n_patches + 1, cfg.d_model)) * 0.02,
+        "layers": jax.vmap(init_layer)(jax.random.split(kl, cfg.num_layers)),
+        "ln_f_s": jnp.ones((cfg.d_model,)), "ln_f_b": jnp.zeros((cfg.d_model,)),
+    }
+
+
+def _mha(p, x, n_heads):
+    b, s, d = x.shape
+    qkv = dense(x, p["wqkv"]).reshape(b, s, 3, n_heads, d // n_heads)
+    q, k, v = qkv[:, :, 0], qkv[:, :, 1], qkv[:, :, 2]
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k) / ((d // n_heads) ** 0.5)
+    a = jax.nn.softmax(logits, -1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", a, v).reshape(b, s, d)
+    return dense(out, p["wo"])
+
+
+def vit_encode(params: dict, images: jax.Array, cfg: ViTConfig) -> jax.Array:
+    """images: (B, H, W, 3) float -> (B, d_model) CLS embeddings."""
+    b = images.shape[0]
+    p = cfg.patch_size
+    n = cfg.image_size // p
+    patches = images.reshape(b, n, p, n, p, 3).transpose(0, 1, 3, 2, 4, 5).reshape(b, n * n, -1)
+    x = dense(patches, params["patch_proj"])
+    x = jnp.concatenate([jnp.broadcast_to(params["cls"], (b, 1, cfg.d_model)), x], axis=1)
+    x = x + params["pos"]
+
+    def body(x, lp):
+        h = layer_norm(x, lp["ln1_s"], lp["ln1_b"])
+        x = x + _mha(lp, h, cfg.num_heads)
+        h = layer_norm(x, lp["ln2_s"], lp["ln2_b"])
+        x = x + dense(jax.nn.gelu(dense(h, lp["w1"])), lp["w2"])
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    x = layer_norm(x, params["ln_f_s"], params["ln_f_b"])
+    return x[:, 0]  # CLS

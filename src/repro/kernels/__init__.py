@@ -1,0 +1,1 @@
+"""Pallas TPU kernels (each: <name>.py kernel + ops.py dispatch + ref.py oracle)."""

@@ -1,0 +1,36 @@
+"""Public dispatch for the facility-location gains kernel (pads + routes)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fl_gains.fl_gains import fl_gains_pallas
+from repro.kernels.fl_gains.ref import fl_gains_ref
+
+
+def fl_gains(
+    K: jax.Array,
+    c: jax.Array,
+    *,
+    block_i: int = 512,
+    block_j: int = 512,
+    use_pallas: bool = True,
+    interpret: bool = False,
+) -> jax.Array:
+    """Facility-location marginal gains; auto-pads to the block grid.
+
+    Padding is exact: padded ground rows use c = +big so relu(K - c) = 0;
+    padded candidate columns are sliced off the result.
+    """
+    if not use_pallas:
+        return fl_gains_ref(K, c)
+    n, n_cand = K.shape
+    bi = min(block_i, max(8, n))
+    bj = min(block_j, max(128, n_cand))
+    pad_i = (-n) % bi
+    pad_j = (-n_cand) % bj
+    if pad_i or pad_j:
+        K = jnp.pad(K, ((0, pad_i), (0, pad_j)))
+        c = jnp.pad(c, (0, pad_i), constant_values=jnp.inf)
+    out = fl_gains_pallas(K, c, block_i=bi, block_j=bj, interpret=interpret)
+    return out[:n_cand]

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the facility-location marginal-gain kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fl_gains_ref(K: jax.Array, c: jax.Array) -> jax.Array:
+    """Facility-location marginal gains for every candidate column.
+
+    gain(j | S) = sum_i max(c_i, K_ij) - sum_i c_i = sum_i relu(K_ij - c_i)
+
+    Args:
+      K: (n, n_cand) similarity columns (ground set x candidates).
+      c: (n,) running max-similarity cache for the current selection S.
+
+    Returns:
+      (n_cand,) float32 gains.
+    """
+    K = K.astype(jnp.float32)
+    c = c.astype(jnp.float32)
+    return jnp.sum(jax.nn.relu(K - c[:, None]), axis=0)

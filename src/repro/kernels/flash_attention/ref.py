@@ -1,0 +1,43 @@
+"""Pure-jnp oracle: causal GQA attention (the downstream LM hot-spot)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gqa_attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+) -> jax.Array:
+    """Grouped-query attention, materialized-scores reference.
+
+    Args:
+      q: (B, Hq, Sq, D)
+      k: (B, Hkv, Sk, D)
+      v: (B, Hkv, Sk, D)   with Hq % Hkv == 0.
+      causal: apply causal mask aligned to the *end* of the key axis
+        (query i attends keys j with j <= i + (Sk - Sq)).
+
+    Returns:
+      (B, Hq, Sq, D) float32.
+    """
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    assert hq % hkv == 0, (hq, hkv)
+    group = hq // hkv
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    q = q.astype(jnp.float32)
+    k = jnp.repeat(k.astype(jnp.float32), group, axis=1)
+    v = jnp.repeat(v.astype(jnp.float32), group, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    if causal:
+        qi = jnp.arange(sq)[:, None] + (sk - sq)
+        kj = jnp.arange(sk)[None, :]
+        logits = jnp.where(kj <= qi, logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v)

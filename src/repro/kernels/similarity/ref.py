@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the blocked cosine-similarity Gram kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def similarity_ref(zq: jax.Array, zk: jax.Array, *, normalized: bool = False) -> jax.Array:
+    """Rescaled cosine similarity: 0.5 + 0.5 * <q, k> / (|q||k|).
+
+    Args:
+      zq: (mq, d) query embeddings.
+      zk: (mk, d) key embeddings.
+      normalized: if True, rows are assumed already L2-normalized.
+
+    Returns:
+      (mq, mk) float32 similarity in [0, 1].
+    """
+    zq = zq.astype(jnp.float32)
+    zk = zk.astype(jnp.float32)
+    if not normalized:
+        zq = zq / jnp.maximum(jnp.linalg.norm(zq, axis=-1, keepdims=True), 1e-8)
+        zk = zk / jnp.maximum(jnp.linalg.norm(zk, axis=-1, keepdims=True), 1e-8)
+    return 0.5 + 0.5 * (zq @ zk.T)

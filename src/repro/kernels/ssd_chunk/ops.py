@@ -1,0 +1,50 @@
+"""Dispatch for the SSD chunk kernel: batch-of-chunks driver matching the
+pure-JAX `_ssd_chunk_scan` contract (scan over chunks, kernel per chunk)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_chunk.ref import ssd_chunk_ref
+from repro.kernels.ssd_chunk.ssd_chunk import ssd_chunk_pallas
+
+
+def ssd_chunk(x, a, b, c, h_in, *, use_pallas: bool = True,
+              block_h: int = 8, interpret: bool = False):
+    """One chunk, batched: x (B,L,H,P), a (B,L,H), b/c (B,L,N), h (B,H,N,P)."""
+    if not use_pallas:
+        y, h = jax.vmap(ssd_chunk_ref)(x, a, b, c, h_in)
+        return y, h
+    return ssd_chunk_pallas(x, a, b, c, h_in, block_h=block_h, interpret=interpret)
+
+
+def ssd_scan(x, a, b, c, *, chunk: int = 256, use_pallas: bool = True,
+             block_h: int = 8, interpret: bool = False):
+    """Full sequence via lax.scan over Pallas chunk steps.
+
+    Same semantics as repro.models.ssm._ssd_chunk_scan (tests assert it).
+    """
+    B, S, H, P = x.shape
+    N = b.shape[-1]
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+    nc = x.shape[1] // chunk
+    xc = x.reshape(B, nc, chunk, H, P).swapaxes(0, 1)
+    ac = a.reshape(B, nc, chunk, H).swapaxes(0, 1)
+    bc = b.reshape(B, nc, chunk, N).swapaxes(0, 1)
+    cc = c.reshape(B, nc, chunk, N).swapaxes(0, 1)
+
+    def step(h, xs):
+        xb, ab, bb, cb = xs
+        y, h_new = ssd_chunk(xb, ab, bb, cb, h, use_pallas=use_pallas,
+                             block_h=block_h, interpret=interpret)
+        return h_new, y
+
+    h0 = jnp.zeros((B, H, N, P), jnp.float32)
+    h_fin, ys = jax.lax.scan(step, h0, (xc, ac, bc, cc))
+    y = ys.swapaxes(0, 1).reshape(B, nc * chunk, H, P)[:, :S]
+    return y, h_fin

@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the SSD intra-chunk kernel (Mamba-2 form)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_chunk_ref(x, a, b, c, h_in):
+    """One SSD chunk, all heads: recurrence h_t = a_t h + (b_t x_tᵀ), y = c_t h.
+
+    Args:
+      x: (L, H, P) values (dt pre-multiplied);
+      a: (L, H) per-head decay in (0, 1];
+      b: (L, N) input projection;  c: (L, N) output projection;
+      h_in: (H, N, P) carried state.
+
+    Returns:
+      y: (L, H, P) outputs; h_out: (H, N, P) state after the chunk.
+    """
+    L, H, P = x.shape
+    N = b.shape[-1]
+    la = jnp.log(jnp.maximum(a.astype(jnp.float32), 1e-20))
+    cum = jnp.cumsum(la, axis=0)                               # (L, H)
+    dt_mat = cum[:, None, :] - cum[None, :, :]                 # (L, L, H) t,s
+    tri = jnp.tril(jnp.ones((L, L), bool))
+    decay = jnp.where(tri[:, :, None], jnp.exp(dt_mat), 0.0)
+    scores = jnp.einsum("tn,sn->ts", c.astype(jnp.float32), b.astype(jnp.float32))
+    w = scores[:, :, None] * decay                             # (L, L, H)
+    y_intra = jnp.einsum("tsh,shp->thp", w, x.astype(jnp.float32))
+    y_inter = jnp.einsum("tn,hnp,th->thp", c.astype(jnp.float32),
+                         h_in.astype(jnp.float32), jnp.exp(cum))
+    tot = cum[-1]                                              # (H,)
+    rem = jnp.exp(tot[None, :] - cum)                          # (L, H)
+    h_out = jnp.exp(tot)[:, None, None] * h_in.astype(jnp.float32) + jnp.einsum(
+        "sn,shp,sh->hnp", b.astype(jnp.float32), x.astype(jnp.float32), rem
+    )
+    return y_intra + y_inter, h_out

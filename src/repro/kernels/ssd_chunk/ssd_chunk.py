@@ -1,0 +1,93 @@
+"""Pallas TPU kernel: SSD intra-chunk scan step (Mamba-2 / jamba hot-spot).
+
+One grid step processes one (batch, head-block) tile of one chunk entirely
+in VMEM:
+
+  decay  = exp(cum_t - cum_s) ∘ tril          (L, L) per head
+  y      = ((C Bᵀ) ∘ decay) X  +  (C h_in) ∘ exp(cum)
+  h_out  = exp(cum_L) h_in + Bᵀ (X ∘ rem)
+
+Grid: (batch, H / block_h); heads are tiled so the (L, L, block_h) decay
+stack plus the (L, N) projections fit VMEM:
+
+  VMEM ≈ 4B · (L² · bh + 2·L·N + L·bh·P + bh·N·P)
+  L=256, bh=8, N=128, P=64:  ≈ 2.6 MB   — comfortably inside the ~16 MB/core.
+
+The L×L matmuls hit the MXU (L multiple of 128); the chunked formulation is
+exactly why SSD replaces the Mamba-1 channel scan on TPU (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_kernel(x_ref, a_ref, b_ref, c_ref, h_ref, y_ref, hout_ref, *, L):
+    x = x_ref[0].astype(jnp.float32)        # (L, bh, P)
+    a = a_ref[0].astype(jnp.float32)        # (L, bh)
+    b = b_ref[0].astype(jnp.float32)        # (L, N)
+    c = c_ref[0].astype(jnp.float32)        # (L, N)
+    h_in = h_ref[0].astype(jnp.float32)     # (bh, N, P)
+
+    la = jnp.log(jnp.maximum(a, 1e-20))
+    cum = jnp.cumsum(la, axis=0)                                 # (L, bh)
+    dt_mat = cum[:, None, :] - cum[None, :, :]                   # (L, L, bh)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    decay = jnp.where((cols <= rows)[:, :, None], jnp.exp(dt_mat), 0.0)
+    scores = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # (L, L)
+    w = scores[:, :, None] * decay                               # (L, L, bh)
+    y_intra = jnp.einsum("tsh,shp->thp", w, x)
+    y_inter = jnp.einsum("tn,hnp->thp", c, h_in) * jnp.exp(cum)[:, :, None]
+    y_ref[0] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    tot = cum[-1]                                                # (bh,)
+    rem = jnp.exp(tot[None, :] - cum)                            # (L, bh)
+    h_out = jnp.exp(tot)[:, None, None] * h_in + jnp.einsum(
+        "sn,shp->hnp", b, x * rem[:, :, None]
+    )
+    hout_ref[0] = h_out.astype(hout_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_h", "interpret"))
+def ssd_chunk_pallas(
+    x: jax.Array,      # (B, L, H, P)
+    a: jax.Array,      # (B, L, H)
+    b: jax.Array,      # (B, L, N)
+    c: jax.Array,      # (B, L, N)
+    h_in: jax.Array,   # (B, H, N, P)
+    *,
+    block_h: int = 8,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    B, L, H, P = x.shape
+    N = b.shape[-1]
+    bh = min(block_h, H)
+    if H % bh:
+        raise ValueError(f"H={H} not divisible by block_h={bh}")
+    grid = (B, H // bh)
+    y, h_out = pl.pallas_call(
+        functools.partial(_ssd_kernel, L=L),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, L, bh, P), lambda i, j: (i, 0, j, 0)),
+            pl.BlockSpec((1, L, bh), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((1, L, N), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, L, N), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, bh, N, P), lambda i, j: (i, j, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, L, bh, P), lambda i, j: (i, 0, j, 0)),
+            pl.BlockSpec((1, bh, N, P), lambda i, j: (i, j, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, L, H, P), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, N, P), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, a, b, c, h_in)
+    return y, h_out

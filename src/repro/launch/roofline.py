@@ -1,0 +1,185 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch, shape, mesh) cell — TPU v5e constants:
+    compute    = HLO_FLOPs        / (chips * 197e12 FLOP/s bf16)
+    memory     = HLO_bytes        / (chips * 819e9  B/s HBM)
+    collective = collective_bytes / (chips * 50e9   B/s per ICI link)
+
+``cost_analysis()`` on a GSPMD-partitioned executable reports the *per-device*
+program (the SPMD module is the single per-device program); we convert to
+global totals by multiplying by chip count — validated in
+tests/test_roofline.py against the analytic 6·N·D model FLOPs.
+
+collective_bytes is not in cost_analysis: we parse the optimized HLO, build
+an id->shape table from instruction results, and sum *operand* sizes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+Operand shapes in the SPMD module are per-device shards, so the sum is
+per-device traffic; global = per-device * chips.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+PEAK_FLOPS = 197e12      # bf16 per chip
+HBM_BW = 819e9           # bytes/s per chip
+ICI_BW = 50e9            # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^)]*\)|\S+)\s+([\w\-]+)")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Bytes of one 'dtype[d0,d1]{layout}' shape string (tuple-aware)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, Any]:
+    """Sum operand bytes of every collective op in the optimized HLO."""
+    # id -> result shape string
+    shapes: dict[str, str] = {}
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if m:
+            shapes[m.group(1)] = m.group(2)
+
+    per_op: dict[str, int] = {c: 0 for c in _COLLECTIVES}
+    counts: dict[str, int] = {c: 0 for c in _COLLECTIVES}
+    operand_re = re.compile(r"%([\w.\-]+)")
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        op = m.group(3)
+        kind = next((c for c in _COLLECTIVES if op.startswith(c)), None)
+        if kind is None:
+            continue
+        counts[kind] += 1
+        # operands: names inside the parens after the op name
+        paren = line[line.find(op) + len(op):]
+        lo = paren.find("(")
+        hi = _match_paren(paren, lo)
+        ops_str = paren[lo + 1 : hi] if lo >= 0 and hi > lo else ""
+        obytes = 0
+        for om in operand_re.finditer(ops_str):
+            s = shapes.get(om.group(1))
+            if s:
+                obytes += _shape_bytes(s)
+        if obytes == 0:
+            # fallback: result shape (all-reduce in/out sizes match)
+            obytes = _shape_bytes(m.group(2))
+        per_op[kind] += obytes
+    return {
+        "per_op_bytes": per_op,
+        "counts": counts,
+        "total_bytes": sum(per_op.values()),
+    }
+
+
+def _match_paren(s: str, lo: int) -> int:
+    if lo < 0:
+        return -1
+    depth = 0
+    for i in range(lo, len(s)):
+        if s[i] == "(":
+            depth += 1
+        elif s[i] == ")":
+            depth -= 1
+            if depth == 0:
+                return i
+    return -1
+
+
+def memory_summary(mem) -> dict[str, Any]:
+    """Normalize compiled.memory_analysis() across backends."""
+    if mem is None:
+        return {"available": False}
+    out = {"available": True}
+    for attr in (
+        "argument_size_in_bytes", "output_size_in_bytes",
+        "temp_size_in_bytes", "generated_code_size_in_bytes",
+        "alias_size_in_bytes", "peak_memory_in_bytes",
+    ):
+        v = getattr(mem, attr, None)
+        if v is not None:
+            out[attr] = int(v)
+    return out
+
+
+def model_flops(cfg, shape) -> float:
+    """6 * N_active * tokens (the standard training-FLOPs model).
+
+    For inference steps we use 2*N per token (forward only).
+    """
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    tokens = shape.global_batch  # one new token per request
+    return 2.0 * n * tokens
+
+
+def roofline_terms_from_hlo(cfg, shape, hlo_totals: dict, *, multi_pod: bool) -> dict:
+    """Preferred path: trip-count-aware totals from hlo_analysis.analyze."""
+    cost = {"flops": hlo_totals["flops"], "bytes accessed": hlo_totals["bytes"]}
+    coll = {"total_bytes": hlo_totals["collective_total_bytes"]}
+    return roofline_terms(cfg, shape, None, cost, coll, multi_pod=multi_pod)
+
+
+def roofline_terms(cfg, shape, mesh, cost: dict, coll: dict, *, multi_pod: bool) -> dict:
+    chips = 512 if multi_pod else 256
+    flops_dev = float(cost.get("flops") or 0.0)
+    bytes_dev = float(cost.get("bytes accessed") or 0.0)
+    coll_dev = float(coll["total_bytes"])
+
+    flops_global = flops_dev * chips
+    bytes_global = bytes_dev * chips
+    coll_global = coll_dev * chips
+
+    compute_s = flops_global / (chips * PEAK_FLOPS)
+    memory_s = bytes_global / (chips * HBM_BW)
+    collective_s = coll_global / (chips * ICI_BW)
+
+    mf = model_flops(cfg, shape)
+    terms = {
+        "chips": chips,
+        "hlo_flops_per_device": flops_dev,
+        "hlo_bytes_per_device": bytes_dev,
+        "collective_bytes_per_device": coll_dev,
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "model_flops": mf,
+        "useful_flops_ratio": mf / flops_global if flops_global else 0.0,
+        "bound": max(
+            ("compute", compute_s), ("memory", memory_s), ("collective", collective_s),
+            key=lambda kv: kv[1],
+        )[0],
+    }
+    dom = max(compute_s, memory_s, collective_s)
+    terms["step_time_lower_bound_s"] = dom
+    terms["roofline_fraction"] = (
+        (mf / (chips * PEAK_FLOPS)) / dom if dom > 0 else 0.0
+    )
+    return terms

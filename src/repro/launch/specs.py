@@ -1,0 +1,155 @@
+"""Abstract input specs for the dry-run: ShapeDtypeStruct stand-ins with
+NamedShardings attached — weak-type-correct, shardable, zero allocation.
+
+For each (arch, shape) cell this builds exactly what the corresponding step
+function consumes:
+  train_4k     -> (TrainState, batch{tokens, labels [, context]})
+  prefill_32k  -> (params, batch{tokens [, context]}, caches)
+  decode_*     -> (params, caches, batch{token, pos [, context]})
+Modality frontends are stubs per the assignment: ``context`` is precomputed
+frame/patch embeddings.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed import sharding as shd
+from repro.models import lm
+from repro.optim.optimizers import Optimizer
+from repro.train import train_state as ts
+
+
+def _sds(shape, dtype, mesh, spec: P):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=NamedSharding(mesh, spec))
+
+
+def abstract_params(cfg: ModelConfig, mesh: Mesh):
+    """Abstract (no allocation) params with production shardings attached."""
+    a = jax.eval_shape(lambda k: lm.init_lm(k, cfg), jax.random.PRNGKey(0))
+    shards = shd.param_shardings(mesh, a)
+    return jax.tree.map(lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s), a, shards)
+
+
+def abstract_train_state(cfg: ModelConfig, mesh: Mesh, opt: Optimizer):
+    a = jax.eval_shape(
+        lambda k: ts.init_train_state(k, cfg, opt), jax.random.PRNGKey(0)
+    )
+    # params and each optimizer-state leaf shard identically (FSDP): optimizer
+    # moments have the same shapes/paths under opt_state/m, /v.
+    p_sh = shd.param_shardings(mesh, a.params)
+
+    def opt_leaf(leaf, path_hint):
+        return leaf
+
+    o_sh = jax.tree.map(lambda l: None, a.opt_state)
+    # match opt-state ("m"/"v" mirror params; scalars replicate)
+    def shard_opt(subtree):
+        return jax.tree.map(
+            lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
+            subtree,
+            p_sh,
+        )
+
+    opt_state = {}
+    for k, v in a.opt_state.items():
+        if isinstance(v, jax.ShapeDtypeStruct) and v.shape == ():
+            opt_state[k] = jax.ShapeDtypeStruct(
+                v.shape, v.dtype, sharding=NamedSharding(mesh, P())
+            )
+        else:
+            opt_state[k] = shard_opt(v)
+
+    params = jax.tree.map(
+        lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s), a.params, p_sh
+    )
+    step = jax.ShapeDtypeStruct((), jnp.int32, sharding=NamedSharding(mesh, P()))
+    return ts.TrainState(params, opt_state, step)
+
+
+def abstract_caches(cfg: ModelConfig, mesh: Mesh, batch: int, cache_len: int):
+    a = jax.eval_shape(lambda: lm.init_caches(cfg, batch, cache_len))
+
+    # SSM states are (G, B, H, N, P) = 5 dims like KV caches (G,B,S,H,D);
+    # distinguish by shape[2] == cache_len (the KV sequence axis).
+    def shard(leaf):
+        shp = leaf.shape
+        if len(shp) == 5 and shp[2] == cache_len:      # (G,B,S,H,D) KV
+            spec = P(None, *shd.cache_spec(mesh, shp[1], shp[2], shp[3]))
+        elif len(shp) == 5:                            # (G,B,H,N,P) SSM state
+            spec = P(None, *shd.ssm_state_spec(mesh, shp[1], shp[2]))
+        elif len(shp) == 3:                            # (G,B,D) slstm
+            ax = shd.batch_axes(mesh)
+            spec = P(None, ax if shp[1] % _axsize(mesh, ax) == 0 else None, None)
+        elif len(shp) <= 2:  # (G,) / (G, B) cache lengths — tiny, replicate
+            spec = P(*([None] * len(shp)))
+        else:
+            spec = P(*([None] * len(shp)))
+        return jax.ShapeDtypeStruct(shp, leaf.dtype, sharding=NamedSharding(mesh, spec))
+
+    return jax.tree.map(shard, a)
+
+
+def _axsize(mesh, axis):
+    import numpy as np
+
+    if isinstance(axis, (tuple, list)):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def train_batch_specs(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    spec = shd.data_spec(mesh, b, 1)
+    batch = {
+        "tokens": _sds((b, s), jnp.int32, mesh, spec),
+        "labels": _sds((b, s), jnp.int32, mesh, spec),
+    }
+    if cfg.is_encdec:
+        batch["context"] = _sds(
+            (b, cfg.encoder_seq, cfg.d_model), jnp.bfloat16, mesh, shd.data_spec(mesh, b, 2)
+        )
+    elif cfg.num_context_tokens:
+        batch["context"] = _sds(
+            (b, cfg.num_context_tokens, cfg.d_model), jnp.bfloat16, mesh, shd.data_spec(mesh, b, 2)
+        )
+    return batch
+
+
+def decode_batch_specs(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig) -> dict:
+    b = shape.global_batch
+    spec = shd.data_spec(mesh, b, 1)
+    batch = {
+        "token": _sds((b, 1), jnp.int32, mesh, spec),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32, sharding=NamedSharding(mesh, P())),
+    }
+    if cfg.is_encdec:
+        batch["context"] = _sds(
+            (b, cfg.encoder_seq, cfg.d_model), jnp.bfloat16, mesh, shd.data_spec(mesh, b, 2)
+        )
+    elif cfg.num_context_tokens:
+        batch["context"] = _sds(
+            (b, cfg.num_context_tokens, cfg.d_model), jnp.bfloat16, mesh, shd.data_spec(mesh, b, 2)
+        )
+    return batch
+
+
+def input_specs(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig, opt: Optimizer) -> tuple:
+    """Everything the cell's step function consumes, fully abstract."""
+    if shape.kind == "train":
+        return (abstract_train_state(cfg, mesh, opt), train_batch_specs(cfg, mesh, shape))
+    if shape.kind == "prefill":
+        params = abstract_params(cfg, mesh)
+        batch = train_batch_specs(cfg, mesh, shape)
+        batch.pop("labels")
+        caches = abstract_caches(cfg, mesh, shape.global_batch, shape.seq_len)
+        return (params, batch, caches)
+    # decode
+    params = abstract_params(cfg, mesh)
+    caches = abstract_caches(cfg, mesh, shape.global_batch, shape.seq_len)
+    batch = decode_batch_specs(cfg, mesh, shape)
+    return (params, caches, batch)

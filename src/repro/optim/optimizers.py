@@ -1,0 +1,84 @@
+"""Optimizers: Nesterov SGD (paper's vision setup), Adam, AdamW.
+
+Implemented in-repo (no optax dependency) as pure pytree transforms with the
+standard (init, update) pair.  Optimizer state shards exactly like the params
+(FSDP over ``data``): the sharding rules map state leaves through the same
+path-based spec as their parameters.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jax.Array], tuple[Any, Any]]
+    # update(grads, state, params, lr) -> (new_params, new_state)
+
+
+def _tmap(f, *trees):
+    return jax.tree.map(f, *trees)
+
+
+def sgd_nesterov(momentum: float = 0.9, weight_decay: float = 5e-4) -> Optimizer:
+    """Nesterov SGD + decoupled L2 (paper: lr .05, wd 5e-4, momentum .9)."""
+
+    def init(params):
+        return {"m": _tmap(lambda p: jnp.zeros_like(p, jnp.float32), params)}
+
+    def update(grads, state, params, lr):
+        g32 = _tmap(lambda g, p: g.astype(jnp.float32) + weight_decay * p.astype(jnp.float32),
+                    grads, params)
+        m = _tmap(lambda m_, g: momentum * m_ + g, state["m"], g32)
+        step = _tmap(lambda g, m_: g + momentum * m_, g32, m)  # Nesterov lookahead
+        new_params = _tmap(lambda p, s: (p.astype(jnp.float32) - lr * s).astype(p.dtype),
+                           params, step)
+        return new_params, {"m": m}
+
+    return Optimizer(init, update)
+
+
+def adam(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0) -> Optimizer:
+    """Adam / AdamW (weight_decay > 0 => decoupled AdamW)."""
+
+    def init(params):
+        z = _tmap(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return {"m": z, "v": jax.tree.map(jnp.copy, z), "t": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        t = state["t"] + 1
+        g32 = _tmap(lambda g: g.astype(jnp.float32), grads)
+        m = _tmap(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], g32)
+        v = _tmap(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], g32)
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+        def upd(p, m_, v_):
+            mhat = m_ / bc1
+            vhat = v_ / bc2
+            step = mhat / (jnp.sqrt(vhat) + eps)
+            if weight_decay:
+                step = step + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+
+        return _tmap(upd, params, m, v), {"m": m, "v": v, "t": t}
+
+    return Optimizer(init, update)
+
+
+def adamw(weight_decay: float = 0.01, **kw) -> Optimizer:
+    return adam(weight_decay=weight_decay, **kw)
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> tuple[Any, jax.Array]:
+    norm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return _tmap(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm
+
+
+GET = {"sgd": sgd_nesterov, "adam": adam, "adamw": adamw}

@@ -1,0 +1,42 @@
+"""LR schedules: cosine annealing (paper default), cyclic (ImageNet), linear
+decay (tuning search space), constant, with optional linear warmup."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine(base_lr: float, total_steps: int, warmup: int = 0, min_lr: float = 0.0):
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / jnp.maximum(warmup, 1)
+        t = jnp.clip((step - warmup) / jnp.maximum(total_steps - warmup, 1), 0.0, 1.0)
+        cos = min_lr + 0.5 * (base_lr - min_lr) * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, cos)
+
+    return fn
+
+
+def cyclic(base_lr: float, max_lr: float, period: int):
+    def fn(step):
+        t = jnp.asarray(step % (2 * period), jnp.float32)
+        up = base_lr + (max_lr - base_lr) * (t / period)
+        down = max_lr - (max_lr - base_lr) * ((t - period) / period)
+        return jnp.where(t < period, up, down)
+
+    return fn
+
+
+def linear_decay(base_lr: float, gamma: float, every: int):
+    """Multiply lr by (1-gamma) every ``every`` steps (paper tuning space)."""
+    def fn(step):
+        k = jnp.asarray(step // every, jnp.float32)
+        return base_lr * (1.0 - gamma) ** k
+
+    return fn
+
+
+def constant(base_lr: float):
+    return lambda step: jnp.asarray(base_lr, jnp.float32)
+
+
+GET = {"cosine": cosine, "cyclic": cyclic, "linear_decay": linear_decay, "constant": constant}

@@ -1,0 +1,105 @@
+"""Curriculum trainer: MILO subsets + fault tolerance + (optionally) the
+distributed mesh.  This is deliverable (b)'s end-to-end driver substrate.
+
+The trainer composes:
+  * a ``Pipeline`` whose selector is MILO (or any baseline),
+  * a jit'd train step (optimizer + schedule + clipping),
+  * ``CheckpointManager`` (atomic, async, keep-last-k),
+  * ``StragglerMonitor``,
+  * deterministic (seed, epoch, step) replay on restart.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+from repro.checkpoint.checkpointer import CheckpointManager
+from repro.data.pipeline import Pipeline
+from repro.distributed.fault_tolerance import StragglerMonitor
+from repro.train.train_state import TrainState
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    epochs: int
+    eval_every_epochs: int = 0
+    checkpoint_dir: str | None = None
+    checkpoint_every_steps: int = 0
+    async_checkpoint: bool = True
+    log_every_steps: int = 50
+
+
+class Trainer:
+    def __init__(
+        self,
+        train_step: Callable[[TrainState, dict], tuple[TrainState, dict]],
+        pipeline: Pipeline,
+        tcfg: TrainerConfig,
+        *,
+        eval_fn: Callable[[TrainState], dict] | None = None,
+        put_batch: Callable[[dict], dict] | None = None,
+    ):
+        self.train_step = jax.jit(train_step)
+        self.pipeline = pipeline
+        self.tcfg = tcfg
+        self.eval_fn = eval_fn
+        self.put_batch = put_batch or (lambda b: b)
+        self.monitor = StragglerMonitor()
+        self.ckpt = (
+            CheckpointManager(tcfg.checkpoint_dir) if tcfg.checkpoint_dir else None
+        )
+        self.history: list[dict] = []
+
+    def _maybe_restore(self, state: TrainState) -> tuple[TrainState, int]:
+        if self.ckpt is None:
+            return state, 0
+        latest = self.ckpt.latest_step()
+        if latest is None:
+            return state, 0
+        state = self.ckpt.restore(latest, state)
+        return state, latest
+
+    def fit(self, state: TrainState, *, resume: bool = True) -> TrainState:
+        t0 = time.time()
+        global_step = 0
+        if resume:
+            state, global_step = self._maybe_restore(state)
+        steps_per_epoch = self.pipeline.steps_per_epoch()
+        start_epoch = global_step // max(steps_per_epoch, 1)
+        start_step = global_step % max(steps_per_epoch, 1)
+
+        for epoch in range(start_epoch, self.tcfg.epochs):
+            for batch in self.pipeline.epoch(epoch, start_step=start_step if epoch == start_epoch else 0):
+                self.monitor.start()
+                state, metrics = self.train_step(state, self.put_batch(batch))
+                slow = self.monitor.stop(global_step)
+                global_step += 1
+                if self.tcfg.log_every_steps and global_step % self.tcfg.log_every_steps == 0:
+                    rec = {k: float(v) for k, v in metrics.items()}
+                    rec.update(step=global_step, epoch=epoch,
+                               wall=round(time.time() - t0, 2), straggler=slow)
+                    self.history.append(rec)
+                if (
+                    self.ckpt is not None
+                    and self.tcfg.checkpoint_every_steps
+                    and global_step % self.tcfg.checkpoint_every_steps == 0
+                ):
+                    if self.tcfg.async_checkpoint:
+                        self.ckpt.save_async(global_step, state)
+                    else:
+                        self.ckpt.save(global_step, state)
+            if self.eval_fn and self.tcfg.eval_every_epochs and (
+                (epoch + 1) % self.tcfg.eval_every_epochs == 0
+            ):
+                ev = {k: float(v) for k, v in self.eval_fn(state).items()}
+                ev.update(step=global_step, epoch=epoch, eval=True,
+                          wall=round(time.time() - t0, 2))
+                self.history.append(ev)
+        if self.ckpt is not None:
+            self.ckpt.wait()
+            self.ckpt.save(global_step, state)
+        return state

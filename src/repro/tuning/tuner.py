@@ -1,0 +1,167 @@
+"""Hyper-parameter tuning: Random / TPE search + Hyperband scheduling, with
+MILO (or baseline) subsets powering the configuration evaluations — the
+AUTOMATA-style pipeline of paper §4 / Fig. 8.
+
+Components (paper's three):
+  a) search algorithms  — RandomSearch, TPESearch (kernel-density TPE),
+  b) config evaluation  — ``objective(config, budget_epochs, selector)``,
+  c) scheduler          — Hyperband successive halving.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Any, Callable
+
+import numpy as np
+
+Space = dict[str, Any]  # name -> ("uniform", lo, hi) | ("log", lo, hi) | ("choice", [..])
+
+
+def sample_config(space: Space, rng: np.random.Generator) -> dict:
+    cfg = {}
+    for name, spec in space.items():
+        kind = spec[0]
+        if kind == "uniform":
+            cfg[name] = float(rng.uniform(spec[1], spec[2]))
+        elif kind == "log":
+            cfg[name] = float(np.exp(rng.uniform(np.log(spec[1]), np.log(spec[2]))))
+        elif kind == "choice":
+            cfg[name] = spec[1][int(rng.integers(len(spec[1])))]
+        else:
+            raise ValueError(kind)
+    return cfg
+
+
+@dataclasses.dataclass
+class RandomSearch:
+    space: Space
+    seed: int = 0
+
+    def __post_init__(self):
+        self._rng = np.random.default_rng(self.seed)
+
+    def suggest(self, history: list[tuple[dict, float]]) -> dict:
+        return sample_config(self.space, self._rng)
+
+
+@dataclasses.dataclass
+class TPESearch:
+    """Tree-structured Parzen Estimator (continuous dims via KDE, choices via
+    re-weighted categorical)."""
+
+    space: Space
+    seed: int = 0
+    gamma: float = 0.25
+    n_candidates: int = 24
+    min_history: int = 8
+
+    def __post_init__(self):
+        self._rng = np.random.default_rng(self.seed)
+
+    def suggest(self, history: list[tuple[dict, float]]) -> dict:
+        if len(history) < self.min_history:
+            return sample_config(self.space, self._rng)
+        scores = np.asarray([s for _, s in history])
+        cut = np.quantile(scores, 1 - self.gamma)     # maximize score
+        good = [c for c, s in history if s >= cut]
+        bad = [c for c, s in history if s < cut]
+        cands = [sample_config(self.space, self._rng) for _ in range(self.n_candidates)]
+
+        def logpdf(cfg: dict, group: list[dict]) -> float:
+            if not group:
+                return 0.0
+            lp = 0.0
+            for name, spec in self.space.items():
+                kind = spec[0]
+                v = cfg[name]
+                if kind == "choice":
+                    counts = sum(1 for g in group if g[name] == v) + 1.0
+                    lp += math.log(counts / (len(group) + len(spec[1])))
+                else:
+                    xs = np.asarray([g[name] for g in group], float)
+                    if kind == "log":
+                        xs, vv = np.log(xs), math.log(v)
+                        bw = max((math.log(spec[2]) - math.log(spec[1])) / 8, 1e-3)
+                    else:
+                        vv = v
+                        bw = max((spec[2] - spec[1]) / 8, 1e-6)
+                    lp += math.log(
+                        np.mean(np.exp(-0.5 * ((vv - xs) / bw) ** 2)) / bw + 1e-12
+                    )
+            return lp
+
+        ratios = [logpdf(c, good) - logpdf(c, bad) for c in cands]
+        return cands[int(np.argmax(ratios))]
+
+
+@dataclasses.dataclass
+class HyperbandResult:
+    best_config: dict
+    best_score: float
+    trials: list[dict]
+    total_epochs: int
+    wall_time: float
+
+
+def hyperband(
+    objective: Callable[[dict, int], float],
+    search,
+    *,
+    max_budget: int = 27,
+    eta: int = 3,
+    seed: int = 0,
+) -> HyperbandResult:
+    """Hyperband [Li'17]: brackets of successive halving.
+
+    ``objective(config, budget_epochs) -> score`` (higher better); evaluations
+    with larger budget may warm-start (caller's choice).
+    """
+    t0 = time.time()
+    s_max = int(math.log(max_budget, eta))
+    trials: list[dict] = []
+    history: list[tuple[dict, float]] = []
+    best_config, best_score = None, -np.inf
+    total_epochs = 0
+
+    for s in range(s_max, -1, -1):
+        n = int(math.ceil((s_max + 1) / (s + 1) * eta ** s))
+        r = max_budget * eta ** (-s)
+        configs = [search.suggest(history) for _ in range(n)]
+        scores = [None] * len(configs)
+        for i in range(s + 1):
+            n_i = int(n * eta ** (-i))
+            r_i = max(1, int(round(r * eta ** i)))
+            results = []
+            for cfg in configs:
+                score = objective(cfg, r_i)
+                total_epochs += r_i
+                results.append(score)
+                history.append((cfg, score))
+                trials.append({"config": cfg, "budget": r_i, "score": score, "bracket": s})
+                if score > best_score:
+                    best_config, best_score = cfg, score
+            order = np.argsort(results)[::-1]
+            keep = max(1, int(n_i / eta))
+            configs = [configs[j] for j in order[:keep]]
+            if len(configs) <= 1 and i < s:
+                # nothing left to halve; finish bracket with the survivor
+                continue
+    return HyperbandResult(best_config, float(best_score), trials, total_epochs,
+                           time.time() - t0)
+
+
+def kendall_tau(a: np.ndarray, b: np.ndarray) -> float:
+    """Kendall rank correlation between two score vectors (paper Tab. 9)."""
+    n = len(a)
+    num = 0
+    den = 0
+    for i in range(n):
+        for j in range(i + 1, n):
+            x = np.sign(a[i] - a[j])
+            y = np.sign(b[i] - b[j])
+            if x and y:
+                num += int(x == y) - int(x != y)
+                den += 1
+    return num / den if den else 0.0

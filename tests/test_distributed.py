@@ -1,0 +1,185 @@
+"""Distribution substrate tests: sharding rules, checkpoint reshard/restart,
+compression, elasticity, straggler monitor, pipeline determinism.
+
+Runs on a small forced-host-device mesh (8 devices) — set before jax init
+via a subprocess-safe env guard in conftest? No: this file relies on
+xdist-free single-process execution and sets the flag only if jax is not yet
+initialized with devices (pytest runs this in the same process as other
+tests, so we use the CPU single-device path where possible and reserve the
+8-device checks for the subprocess test).
+"""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpointer import CheckpointManager
+from repro.data.pipeline import FullSelector, Pipeline
+from repro.distributed.compression import (
+    compress_with_feedback,
+    init_error_feedback,
+    int8_compress,
+    int8_decompress,
+    topk_compress,
+    topk_decompress,
+)
+from repro.distributed.fault_tolerance import StragglerMonitor, elastic_plan, restart_state
+
+
+def test_checkpoint_roundtrip_and_gc(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep_last=2)
+    tree = {"a": jnp.arange(12).reshape(3, 4), "b": {"c": jnp.ones((5,), jnp.bfloat16)}}
+    for step in (1, 2, 3):
+        mgr.save(step, jax.tree.map(lambda x: x + step, tree))
+    assert mgr.all_steps() == [2, 3]  # keep_last=2 garbage-collected step 1
+    out = mgr.restore(3, tree)
+    np.testing.assert_array_equal(np.asarray(out["a"]), np.arange(12).reshape(3, 4) + 3)
+    assert out["b"]["c"].dtype == jnp.bfloat16
+
+
+def test_checkpoint_async_and_atomicity(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    tree = {"w": jnp.ones((64, 64))}
+    mgr.save_async(10, tree)
+    mgr.wait()
+    assert mgr.latest_step() == 10
+    # no tmp dirs left behind
+    assert not [d for d in os.listdir(tmp_path) if d.endswith(".tmp")]
+
+
+def test_checkpoint_restore_with_resharding_single_device(tmp_path):
+    """Restore with explicit shardings (single-device NamedSharding here;
+    the multi-device reshard path is covered in the subprocess test)."""
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+    mgr = CheckpointManager(str(tmp_path))
+    tree = {"w": jnp.arange(16.0).reshape(4, 4)}
+    mgr.save(1, tree)
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    sh = {"w": NamedSharding(mesh, P("data", None))}
+    out = mgr.restore(1, tree, shardings=sh)
+    assert out["w"].sharding == sh["w"]
+
+
+def test_int8_compression_error_bounded():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(512,)).astype(np.float32))
+    c = int8_compress(x)
+    y = int8_decompress(c)
+    rel = float(jnp.max(jnp.abs(x - y)) / jnp.max(jnp.abs(x)))
+    assert rel < 1.5 / 127
+
+
+def test_topk_compression_keeps_largest():
+    x = jnp.asarray(np.r_[np.zeros(90), np.arange(1, 11)].astype(np.float32))
+    vals, idx = topk_compress(x, density=0.1)
+    y = topk_decompress(vals, idx, x.shape)
+    np.testing.assert_allclose(np.asarray(y)[-10:], np.arange(1, 11))
+    assert float(jnp.sum(jnp.abs(y[:90]))) == 0.0
+
+
+def test_error_feedback_preserves_signal_over_steps():
+    """With error feedback, the accumulated applied gradient converges to the
+    accumulated true gradient (compression noise does not bias)."""
+    rng = np.random.default_rng(1)
+    g_true = {"w": jnp.asarray(rng.normal(size=(256,)).astype(np.float32))}
+    ef = init_error_feedback(g_true)
+    applied = jnp.zeros((256,))
+    steps = 30
+    for _ in range(steps):
+        out, ef = compress_with_feedback(g_true, ef, scheme="topk", density=0.05)
+        applied = applied + out["w"]
+    target = g_true["w"] * steps
+    # direction aligned and magnitude within 20%
+    cos = float(jnp.vdot(applied, target) / (jnp.linalg.norm(applied) * jnp.linalg.norm(target)))
+    assert cos > 0.97
+    assert 0.8 < float(jnp.linalg.norm(applied) / jnp.linalg.norm(target)) < 1.2
+
+
+def test_elastic_plan_preserves_global_batch():
+    p = elastic_plan(256, model_parallel=16, global_batch=256, microbatch_per_replica=16)
+    assert p.mesh_shape == (16, 16) and p.grad_accum == 1
+    # lose half the data axis -> accumulate 2x
+    p = elastic_plan(128, model_parallel=16, global_batch=256, microbatch_per_replica=16)
+    assert p.mesh_shape == (8, 16) and p.grad_accum == 2
+    with pytest.raises(ValueError):
+        elastic_plan(100, model_parallel=16, global_batch=256, microbatch_per_replica=16)
+
+
+def test_straggler_monitor_flags_outliers():
+    mon = StragglerMonitor(warmup_steps=3, z_threshold=3.0)
+    for i in range(20):
+        mon.observe(i, 0.1 + 0.001 * (i % 3))
+    assert mon.observe(20, 1.5) is True
+    assert mon.flagged and mon.flagged[-1][0] == 20
+
+
+def test_restart_state_deterministic():
+    a = restart_state(7, 123, steps_per_epoch=10)
+    b = restart_state(7, 123, steps_per_epoch=10)
+    assert a == b and a["epoch"] == 12 and a["step_in_epoch"] == 3
+
+
+def test_pipeline_deterministic_and_restartable():
+    ds = np.arange(100)
+    pipe = Pipeline(lambda idx: {"x": ds[idx]}, FullSelector(100), batch_size=8, seed=3,
+                    prefetch=False)
+    full = [b["x"].tolist() for b in pipe.epoch(2)]
+    replay = [b["x"].tolist() for b in pipe.epoch(2, start_step=5)]
+    assert replay == full[5:], "restart must replay the identical tail"
+    again = [b["x"].tolist() for b in pipe.epoch(2)]
+    assert again == full
+
+
+def test_sharding_rules_divisibility_guard():
+    """Non-divisible dims must replicate instead of relying on uneven GSPMD."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed import sharding as shd
+
+    mesh = jax.make_mesh((1,), ("model",), axis_types=(jax.sharding.AxisType.Auto,))
+    assert shd.maybe(mesh, 10, "model") == "model"  # divisible by 1
+    # use the spec helper directly with a fake 16-wide mesh via monkeypatched
+    # axis size: covered end-to-end by the dry-run, here just the API shape
+    spec = shd._leaf_spec(mesh, "groups/b0/mixer/wq", (4, 64, 4, 16))
+    assert isinstance(spec, P)
+
+
+MULTIDEV_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.checkpoint.checkpointer import CheckpointManager
+import sys
+
+tmp = sys.argv[1]
+mesh1 = jax.make_mesh((4, 2), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+x = jax.device_put(jnp.arange(64.0).reshape(8, 8), NamedSharding(mesh1, P("data", "model")))
+mgr = CheckpointManager(tmp)
+mgr.save(5, {"w": x})
+# elastic restart onto a DIFFERENT mesh shape
+mesh2 = jax.make_mesh((2, 4), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+out = mgr.restore(5, {"w": x}, shardings={"w": NamedSharding(mesh2, P("data", "model"))})
+assert out["w"].sharding.mesh.shape["data"] == 2
+np.testing.assert_array_equal(np.asarray(out["w"]), np.arange(64.0).reshape(8, 8))
+print("RESHARD_OK")
+"""
+
+
+def test_checkpoint_elastic_reshard_multidevice(tmp_path):
+    """Save on a (4,2) mesh, restore onto (2,4) — in a subprocess so the
+    forced 8-device runtime never leaks into this test session."""
+    env = dict(os.environ, PYTHONPATH="src")
+    r = subprocess.run(
+        [sys.executable, "-c", MULTIDEV_SCRIPT, str(tmp_path)],
+        capture_output=True, text=True, env=env, cwd=os.path.dirname(os.path.dirname(__file__)),
+        timeout=120,
+    )
+    assert "RESHARD_OK" in r.stdout, r.stderr[-2000:]

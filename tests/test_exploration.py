@@ -1,0 +1,95 @@
+"""Tests for Taylor-softmax, WRE sampling, curriculum, partitioning."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import CurriculumConfig, taylor_softmax, weighted_sample_without_replacement
+from repro.core.partition import (
+    Partition,
+    merge_class_selections,
+    partition_by_class,
+    proportional_budgets,
+)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.floats(-5, 5), min_size=2, max_size=64))
+def test_taylor_softmax_is_distribution(gs):
+    p = np.asarray(taylor_softmax(jnp.asarray(gs, jnp.float32)))
+    assert np.all(p > 0), "strictly positive even for negative gains"
+    np.testing.assert_allclose(p.sum(), 1.0, rtol=1e-5)
+
+
+def test_taylor_softmax_monotone_in_gain():
+    g = jnp.asarray([0.0, 1.0, 2.0, 3.0])
+    p = np.asarray(taylor_softmax(g))
+    assert np.all(np.diff(p) > 0)
+
+
+def test_wre_sampling_without_replacement_and_bias():
+    m = 200
+    probs = np.full(m, 0.5 / (m - 1), np.float64)
+    probs[0] = 0.5
+    probs /= probs.sum()
+    counts = np.zeros(m)
+    trials = 400
+    for t in range(trials):
+        idx = np.asarray(
+            weighted_sample_without_replacement(jax.random.PRNGKey(t), jnp.asarray(probs), 10)
+        )
+        assert len(set(idx.tolist())) == 10
+        counts[idx] += 1
+    # element 0 carries half the mass: it must appear in nearly every draw
+    assert counts[0] / trials > 0.9
+    assert counts[0] > 5 * counts[1:].mean()
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    sizes=st.lists(st.integers(1, 50), min_size=1, max_size=8),
+    k_frac=st.floats(0.05, 0.9),
+)
+def test_proportional_budgets_sum_and_capacity(sizes, k_frac):
+    parts = []
+    lo = 0
+    for i, s in enumerate(sizes):
+        parts.append(Partition(i, np.arange(lo, lo + s)))
+        lo += s
+    total = sum(sizes)
+    k = max(1, int(total * k_frac))
+    budgets = proportional_budgets(parts, k)
+    assert sum(budgets) == min(k, total)
+    for b, s in zip(budgets, sizes):
+        assert 0 <= b <= s
+
+
+def test_partition_roundtrip():
+    labels = np.asarray([2, 0, 1, 0, 2, 2, 1])
+    parts = partition_by_class(labels)
+    assert sorted(p.label for p in parts) == [0, 1, 2]
+    sel = [np.arange(min(2, len(p.indices))) for p in parts]
+    merged = merge_class_selections(parts, sel)
+    assert len(set(merged.tolist())) == len(merged)
+    for g in merged:
+        assert 0 <= g < len(labels)
+
+
+def test_curriculum_phases_and_reselection():
+    cur = CurriculumConfig(total_epochs=12, kappa=1 / 6, R=2)
+    assert cur.sge_epochs == 2
+    assert cur.phase(0) == "sge" and cur.phase(1) == "sge"
+    assert cur.phase(2) == "wre" and cur.phase(11) == "wre"
+    assert cur.needs_new_subset(0)
+    assert not cur.needs_new_subset(1)
+    assert cur.needs_new_subset(2)  # phase boundary
+    assert cur.needs_new_subset(4)
+    assert not cur.needs_new_subset(5)
+
+
+def test_curriculum_validation():
+    with pytest.raises(ValueError):
+        CurriculumConfig(total_epochs=10, kappa=1.5)
+    with pytest.raises(ValueError):
+        CurriculumConfig(total_epochs=10, R=0)

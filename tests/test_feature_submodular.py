@@ -1,0 +1,90 @@
+"""Kernel-free (landmark) submodular selection — quality vs the exact kernel
+path, memory scaling, and engine compatibility (the paper's stated future
+work, implemented; see core/feature_submodular.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import facility_location, gram_matrix, greedy
+from repro.core.feature_submodular import (
+    feature_facility_location,
+    feature_graph_cut,
+    feature_greedy_select,
+    kmeans_pp_landmarks,
+    landmark_features,
+)
+from repro.data.datasets import GaussianMixtureDataset
+
+
+@pytest.fixture(scope="module")
+def clustered():
+    ds = GaussianMixtureDataset(n=400, n_classes=8, dim=16, seed=0)
+    return jnp.asarray(ds.features()), ds
+
+
+def test_landmark_features_shape_and_range(clustered):
+    z, _ = clustered
+    phi = landmark_features(jax.random.PRNGKey(0), z, 32)
+    assert phi.shape == (400, 32)
+    assert float(jnp.min(phi)) >= -1e-3 and float(jnp.max(phi)) <= 1 + 1e-3
+
+
+def test_kmeans_pp_covers_clusters(clustered):
+    z, ds = clustered
+    centers = kmeans_pp_landmarks(jax.random.PRNGKey(1), z, 16)
+    # every sample should be close to some landmark (coverage)
+    d2 = jnp.min(jnp.sum((z[:, None] - centers[None]) ** 2, -1), axis=1)
+    assert float(jnp.mean(jnp.sqrt(d2))) < float(jnp.std(z)) * 3
+
+
+def test_feature_fl_greedy_near_exact_objective(clustered):
+    """Landmark-FL selection must recover >=90% of the exact-FL objective."""
+    z, _ = clustered
+    k = 20
+    K = gram_matrix(z)
+    exact = greedy(facility_location, K, k)
+    m_exact = np.zeros(z.shape[0], bool)
+    m_exact[np.asarray(exact.indices)] = True
+    v_exact = float(facility_location.evaluate(jnp.asarray(m_exact), K))
+
+    sel = feature_greedy_select(jax.random.PRNGKey(0), z, k)
+    m_feat = np.zeros(z.shape[0], bool)
+    m_feat[np.asarray(sel.indices)] = True
+    v_feat = float(facility_location.evaluate(jnp.asarray(m_feat), K))
+    assert v_feat >= 0.9 * v_exact, (v_feat, v_exact)
+    assert len(set(np.asarray(sel.indices).tolist())) == k
+
+
+def test_feature_fl_gain_consistency(clustered):
+    """Incremental gains must equal evaluate-deltas on the Φ ground set."""
+    z, _ = clustered
+    phi = landmark_features(jax.random.PRNGKey(0), z[:64], 16)
+    fn = feature_facility_location
+    state = fn.init(phi)
+    mask = np.zeros(64, bool)
+    rng = np.random.default_rng(0)
+    for j in rng.permutation(64)[:8]:
+        gains = np.asarray(fn.gains(state, phi))
+        before = float(fn.evaluate(jnp.asarray(mask), phi))
+        mask[j] = True
+        after = float(fn.evaluate(jnp.asarray(mask), phi))
+        np.testing.assert_allclose(gains[j], after - before, rtol=1e-4, atol=1e-4)
+        state = fn.update(state, phi, jnp.asarray(j))
+
+
+def test_feature_graph_cut_monotone_prefix(clustered):
+    z, _ = clustered
+    phi = landmark_features(jax.random.PRNGKey(0), z[:64], 16)
+    res = greedy(feature_graph_cut, phi, 10)
+    gains = np.asarray(res.gains)
+    assert np.all(np.diff(gains) <= 1e-3), "diminishing returns along greedy"
+
+
+def test_memory_scaling_vs_kernel():
+    """The whole point: Φ is m x L, not m x m."""
+    m, L = 2048, 64
+    z = jnp.asarray(np.random.default_rng(0).normal(size=(m, 24)), jnp.float32)
+    phi = landmark_features(jax.random.PRNGKey(0), z, L)
+    assert phi.size == m * L
+    assert m * m // phi.size == m // L  # 32x smaller than the Gram matrix here

@@ -1,0 +1,158 @@
+"""Property tests for the set functions and greedy engines (hypothesis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    disparity_min,
+    disparity_sum,
+    facility_location,
+    gram_matrix,
+    graph_cut,
+    greedy,
+    greedy_importance,
+    make_graph_cut,
+    stochastic_greedy,
+)
+from repro.core.greedy import stochastic_candidate_count
+
+
+def _kernel(n: int, seed: int) -> jnp.ndarray:
+    rng = np.random.default_rng(seed)
+    z = rng.normal(size=(n, 8)).astype(np.float32)
+    return gram_matrix(jnp.asarray(z))
+
+
+FNS = {
+    "facility_location": facility_location,
+    "graph_cut": graph_cut,
+    "disparity_sum": disparity_sum,
+}
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(4, 16))
+def test_incremental_gains_match_evaluate(seed, n):
+    """gains(state) must equal f(S u j) - f(S) computed from scratch."""
+    K = _kernel(n, seed)
+    rng = np.random.default_rng(seed)
+    for name, fn in FNS.items():
+        mask = np.zeros(n, bool)
+        state = fn.init(K)
+        for j in rng.permutation(n)[: n // 2]:
+            gains = np.asarray(fn.gains(state, K))
+            before = float(fn.evaluate(jnp.asarray(mask), K))
+            mask[j] = True
+            after = float(fn.evaluate(jnp.asarray(mask), K))
+            np.testing.assert_allclose(gains[j], after - before, rtol=1e-4, atol=1e-4,
+                                       err_msg=f"{name} at j={j}")
+            state = fn.update(state, K, jnp.asarray(j))
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_submodularity_diminishing_returns(seed):
+    """f(A u x) - f(A) >= f(B u x) - f(B) for A subset B (submodular fns)."""
+    n = 10
+    K = _kernel(n, seed)
+    rng = np.random.default_rng(seed)
+    for fn in (facility_location, graph_cut):
+        perm = rng.permutation(n)
+        a_idx, b_extra, x = perm[:3], perm[3:6], int(perm[6])
+        sa = fn.init(K)
+        for j in a_idx:
+            sa = fn.update(sa, K, jnp.asarray(j))
+        sb = sa
+        for j in b_extra:
+            sb = fn.update(sb, K, jnp.asarray(j))
+        ga = float(fn.gains(sa, K)[x])
+        gb = float(fn.gains(sb, K)[x])
+        assert ga >= gb - 1e-4, (fn.name, ga, gb)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_monotonicity(seed):
+    n = 8
+    K = _kernel(n, seed)
+    for fn in (facility_location, graph_cut):
+        mask = np.zeros(n, bool)
+        prev = float(fn.evaluate(jnp.asarray(mask), K))
+        for j in np.random.default_rng(seed).permutation(n):
+            mask[j] = True
+            cur = float(fn.evaluate(jnp.asarray(mask), K))
+            assert cur >= prev - 1e-4, fn.name
+            prev = cur
+
+
+def test_greedy_approximation_vs_bruteforce():
+    """Greedy must reach >= (1-1/e) of the optimal FL value on tiny instances."""
+    import itertools
+
+    n, k = 10, 3
+    K = _kernel(n, 0)
+    res = greedy(facility_location, K, k)
+    mask = np.zeros(n, bool)
+    mask[np.asarray(res.indices)] = True
+    greedy_val = float(facility_location.evaluate(jnp.asarray(mask), K))
+    best = -np.inf
+    for combo in itertools.combinations(range(n), k):
+        m = np.zeros(n, bool)
+        m[list(combo)] = True
+        best = max(best, float(facility_location.evaluate(jnp.asarray(m), K)))
+    assert greedy_val >= (1 - 1 / np.e) * best - 1e-5
+    assert greedy_val >= 0.99 * best  # FL greedy is near-exact in practice
+
+
+def test_greedy_no_duplicates_and_gains_decreasing():
+    n, k = 40, 12
+    K = _kernel(n, 3)
+    res = greedy(facility_location, K, k)
+    idx = np.asarray(res.indices)
+    assert len(set(idx.tolist())) == k
+    gains = np.asarray(res.gains)
+    assert np.all(np.diff(gains) <= 1e-4)  # diminishing returns along the run
+
+
+def test_stochastic_greedy_distinct_subsets_and_quality():
+    n, k = 60, 10
+    K = _kernel(n, 5)
+    s = stochastic_candidate_count(n, k, 0.01)
+    runs = [
+        tuple(np.asarray(stochastic_greedy(facility_location, K, k, jax.random.PRNGKey(i), s=s).indices).tolist())
+        for i in range(4)
+    ]
+    assert len(set(runs)) > 1, "stochastic greedy must vary across seeds"
+    # quality close to exact greedy
+    exact = greedy(facility_location, K, k)
+    m = np.zeros(n, bool)
+    m[np.asarray(exact.indices)] = True
+    v_exact = float(facility_location.evaluate(jnp.asarray(m), K))
+    for r in runs:
+        m = np.zeros(n, bool)
+        m[list(r)] = True
+        v = float(facility_location.evaluate(jnp.asarray(m), K))
+        assert v >= 0.85 * v_exact
+
+
+def test_greedy_importance_covers_all_elements():
+    n = 30
+    K = _kernel(n, 7)
+    g = np.asarray(greedy_importance(disparity_min, K))
+    assert g.shape == (n,)
+    assert np.isfinite(g).all()
+
+
+def test_graph_cut_lambda_monotone_for_small_lambda():
+    n = 12
+    K = _kernel(n, 9)
+    fn = make_graph_cut(0.4)
+    mask = np.zeros(n, bool)
+    prev = float(fn.evaluate(jnp.asarray(mask), K))
+    for j in range(n):
+        mask[j] = True
+        cur = float(fn.evaluate(jnp.asarray(mask), K))
+        assert cur >= prev - 1e-4
+        prev = cur
