@@ -12,17 +12,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import accuracy, csv_row, init_mlp, mlp_logits, train_with_selector
-from repro.baselines.selectors import (
-    AdaptiveRandomSelector,
-    CraigPBSelector,
-    GlisterSelector,
-    GradMatchPBSelector,
-    MiloFixedSelector,
-    RandomSelector,
-)
-from repro.core import CurriculumConfig, MiloPreprocessor, MiloSelector
+from repro.core import MiloPreprocessor
 from repro.data.datasets import GaussianMixtureDataset
-from repro.data.pipeline import FullSelector
+from repro.selection import build_selector
 
 
 def run(verbose: bool = True) -> list[str]:
@@ -34,8 +26,8 @@ def run(verbose: bool = True) -> list[str]:
     rows = []
 
     # FULL skyline
-    full = train_with_selector(feats, labs, FullSelector(len(tr)), epochs=epochs,
-                               test_x=tx, test_y=ty)
+    full = train_with_selector(feats, labs, build_selector("full", n=len(tr)),
+                               epochs=epochs, test_x=tx, test_y=ty)
     rows.append(csv_row("training/full", full["train_time"] * 1e6,
                         f"acc={full['final_acc']:.4f} speedup=1.00"))
     if verbose:
@@ -64,13 +56,16 @@ def run(verbose: bool = True) -> list[str]:
         md = pre.preprocess(feats, labs, jax.random.PRNGKey(0))
         preprocess_s = time.perf_counter() - pre_t0
         selectors = {
-            "milo": MiloSelector(md, CurriculumConfig(total_epochs=epochs, kappa=1 / 6, R=1)),
-            "random": RandomSelector(len(tr), k, seed=0),
-            "adaptive_random": AdaptiveRandomSelector(len(tr), k, R=1, seed=0),
-            "milo_fixed": MiloFixedSelector(feats, k),
-            "craigpb_R10": CraigPBSelector(grad_fn, k, R=10),
-            "gradmatchpb_R10": GradMatchPBSelector(grad_fn, k, R=10),
-            "glister_R10": GlisterSelector(grad_fn, val_grad_fn, k, R=10),
+            "milo": build_selector("milo", metadata=md, total_epochs=epochs,
+                                   kappa=1 / 6, R=1),
+            "random": build_selector("random", n=len(tr), k=k, seed=0),
+            "adaptive_random": build_selector("adaptive_random", n=len(tr), k=k,
+                                              R=1, seed=0),
+            "milo_fixed": build_selector("milo_fixed", features=feats, k=k),
+            "craigpb_R10": build_selector("craig_pb", grad_fn=grad_fn, k=k, R=10),
+            "gradmatchpb_R10": build_selector("gradmatch_pb", grad_fn=grad_fn, k=k, R=10),
+            "glister_R10": build_selector("glister", grad_fn=grad_fn,
+                                          val_grad_fn=val_grad_fn, k=k, R=10),
         }
         for name, sel in selectors.items():
             out = train_with_selector(feats, labs, sel, epochs=epochs,

@@ -10,10 +10,9 @@ import jax
 import numpy as np
 
 from benchmarks.common import csv_row, train_with_selector
-from repro.baselines.selectors import AdaptiveRandomSelector, RandomSelector
-from repro.core import CurriculumConfig, MiloPreprocessor, MiloSelector
+from repro.core import MiloPreprocessor
 from repro.data.datasets import GaussianMixtureDataset
-from repro.data.pipeline import FullSelector
+from repro.selection import build_selector
 from repro.tuning.tuner import RandomSearch, TPESearch, hyperband, kendall_tau
 
 SPACE = {"lr": ("log", 3e-3, 0.3), "hidden": ("choice", [32, 64, 128])}
@@ -43,10 +42,10 @@ def run(verbose: bool = True) -> list[str]:
     k = md.k
 
     factories = {
-        "full": lambda: FullSelector(len(tr)),
-        "milo": lambda: MiloSelector(md, CurriculumConfig(total_epochs=30, kappa=1 / 6)),
-        "random": lambda: RandomSelector(len(tr), k, seed=0),
-        "adaptive_random": lambda: AdaptiveRandomSelector(len(tr), k, R=1),
+        "full": lambda: build_selector("full", n=len(tr)),
+        "milo": lambda: build_selector("milo", metadata=md, total_epochs=30, kappa=1 / 6),
+        "random": lambda: build_selector("random", n=len(tr), k=k, seed=0),
+        "adaptive_random": lambda: build_selector("adaptive_random", n=len(tr), k=k, R=1),
     }
     results = {}
     for sname, search_cls in (("random_hb", RandomSearch), ("tpe_hb", TPESearch)):
@@ -73,8 +72,8 @@ def run(verbose: bool = True) -> list[str]:
     k_epochs = 12
 
     tau_factories = dict(factories)
-    tau_factories["milo"] = lambda: MiloSelector(
-        md, CurriculumConfig(total_epochs=k_epochs, kappa=1 / 6))
+    tau_factories["milo"] = lambda: build_selector(
+        "milo", metadata=md, total_epochs=k_epochs, kappa=1 / 6)
 
     def scores_with(factory):
         out = np.zeros(len(grid))

@@ -1,5 +1,7 @@
-"""Shared benchmark machinery: a small classifier trained on per-epoch index
-streams (CPU-scale stand-in for the paper's ResNet/LSTM downstream models)."""
+"""Shared benchmark machinery: a small classifier trained on per-epoch
+``SelectionPlan`` streams (CPU-scale stand-in for the paper's ResNet/LSTM
+downstream models).  Plan weights (CRAIG's γ, GRAD-MATCH's OMP coefficients)
+are consumed by the loss; legacy selectors are adapted to uniform weights."""
 from __future__ import annotations
 
 import time
@@ -9,41 +11,24 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models.layers import dense, init_dense
-
-
-def init_mlp(key, d_in: int, n_classes: int, d_hidden: int = 64) -> dict:
-    k1, k2, k3 = jax.random.split(key, 3)
-    return {
-        "w1": init_dense(k1, d_in, d_hidden, jnp.float32), "b1": jnp.zeros((d_hidden,)),
-        "w2": init_dense(k2, d_hidden, d_hidden, jnp.float32), "b2": jnp.zeros((d_hidden,)),
-        "w3": init_dense(k3, d_hidden, n_classes, jnp.float32), "b3": jnp.zeros((n_classes,)),
-    }
-
-
-def mlp_logits(p, x):
-    h = jax.nn.relu(dense(x, p["w1"]) + p["b1"])
-    h = jax.nn.relu(dense(h, p["w2"]) + p["b2"])
-    return dense(h, p["w3"]) + p["b3"]
+from repro.models.classifier import (
+    accuracy,
+    init_mlp,
+    mlp_logits,
+    nesterov_update,
+    weighted_nll,
+)
+from repro.selection import ensure_selector
 
 
 @jax.jit
-def _sgd_epoch(params, mom, x, y, lr):
-    """One full pass over (x, y) as a single batch with Nesterov momentum."""
+def _sgd_epoch(params, mom, x, y, w, lr):
+    """One full pass over (x, y) as a single batch with Nesterov momentum,
+    weighting each sample's NLL by its plan weight ``w`` (uniform = plain CE)."""
 
-    def loss(p):
-        lp = jax.nn.log_softmax(mlp_logits(p, x))
-        return -jnp.mean(jnp.take_along_axis(lp, y[:, None], 1))
-
-    l, g = jax.value_and_grad(loss)(params)
-    mom = jax.tree.map(lambda m, gg: 0.9 * m + gg, mom, g)
-    params = jax.tree.map(lambda p, m, gg: p - lr * (gg + 0.9 * m), params, mom, g)
+    l, g = jax.value_and_grad(weighted_nll)(params, x, y, w)
+    params, mom = nesterov_update(params, mom, g, lr)
     return params, mom, l
-
-
-@jax.jit
-def accuracy(params, x, y):
-    return jnp.mean(jnp.argmax(mlp_logits(params, x), -1) == y)
 
 
 def train_with_selector(
@@ -62,9 +47,12 @@ def train_with_selector(
 ) -> dict:
     """Train the bench MLP on selector-chosen subsets; track acc vs time.
 
+    ``selector`` may implement either protocol (``plan`` or the legacy
+    ``indices_for_epoch``); plan weights flow into the weighted loss.
     ``sub_steps`` full-batch passes per epoch over the selected subset keep
     the comparison faithful to minibatch epochs while staying jit-hot.
     """
+    selector = ensure_selector(selector)
     xj, yj = jnp.asarray(features), jnp.asarray(labels)
     tx, ty = jnp.asarray(test_x), jnp.asarray(test_y)
     params = init_mlp(jax.random.PRNGKey(seed), features.shape[1], int(labels.max()) + 1)
@@ -73,25 +61,37 @@ def train_with_selector(
     # warm the jit caches outside the timed region — otherwise whichever
     # selector runs first in a comparison eats the compile time (including
     # the threefry kernels behind the WRE Gumbel draw at the final epoch)
-    warm_idx = np.asarray(selector.indices_for_epoch(0))
-    _ = np.asarray(selector.indices_for_epoch(epochs - 1))
-    if hasattr(selector, "_cache_epoch"):
-        selector._cache_epoch = -1
-    _p, _m, _ = _sgd_epoch(params, mom, xj[warm_idx], yj[warm_idx], 0.0)
+    # validate once against this dataset (outside the timed loop): jnp gather
+    # clamps out-of-range indices silently, so a selector built from a stale
+    # artifact would otherwise train on wrong samples with no error
+    warm = selector.plan(0).validate(len(features))
+    if warm.phase in ("sge", "wre"):
+        # curriculum selectors draw differently late in training (WRE Gumbel)
+        # — compile that too; for R-windowed model-dependent selectors the
+        # same call would force a full re-selection that epoch 0 discards
+        _ = selector.plan(epochs - 1).validate(len(features))
+    # unconditional on purpose (unlike MiloSession.train): the timed loop must
+    # charge windowed selectors their epoch-0 selection, exactly as the seed
+    # code's `epoch % R == 0` recompute did — that cost IS the benchmark's
+    # argument for MILO's preprocessing decoupling
+    getattr(selector, "reset_cache", lambda: None)()
+    _p, _m, _ = _sgd_epoch(params, mom, xj[warm.indices], yj[warm.indices],
+                           jnp.asarray(warm.weights), 0.0)
     jax.block_until_ready(accuracy(_p, tx, ty))
     t0 = time.perf_counter()
     select_time = 0.0
     for epoch in range(epochs):
         ts = time.perf_counter()
-        idx = np.asarray(selector.indices_for_epoch(epoch))
+        plan = selector.plan(epoch)
         select_time += time.perf_counter() - ts
-        xs, ys = xj[idx], yj[idx]
+        xs, ys = xj[plan.indices], yj[plan.indices]
+        ws = jnp.asarray(plan.weights)
         # float(): keep the lr a weak-typed python scalar — an np.float64
         # here silently changes the jit cache key vs the warm-up call and
         # recompiles inside the timed region
         cos = float(0.5 * (1 + np.cos(np.pi * epoch / max(epochs - 1, 1))))
         for _ in range(sub_steps):
-            params, mom, l = _sgd_epoch(params, mom, xs, ys, lr * cos)
+            params, mom, l = _sgd_epoch(params, mom, xs, ys, ws, lr * cos)
         if epoch % eval_every == 0 or epoch == epochs - 1:
             acc = float(accuracy(params, tx, ty))
             curve.append({"epoch": epoch, "acc": acc,

@@ -1,51 +1,56 @@
-"""Quickstart: MILO end-to-end in ~40 lines.
+"""Quickstart: MILO end-to-end through the ``MiloSession`` facade.
 
 1. Build a dataset + frozen-encoder features.
-2. One-time preprocessing -> MiloMetadata (the shareable artifact).
-3. Train a classifier on the easy-to-hard curriculum.
-4. Train a SECOND model from the SAME metadata — zero extra selection cost:
-   the model-agnostic claim in action.
+2. ``session.preprocess`` — one-time pass producing the shareable artifact.
+3. ``session.train`` — a classifier on the easy-to-hard curriculum.
+4. Train a SECOND model from the SAME artifact, loaded from disk by a fresh
+   session — zero extra selection cost: the model-agnostic claim in action.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 import time
 
-import jax
-
-from benchmarks.common import train_with_selector
-from repro.core import CurriculumConfig, MiloPreprocessor, MiloSelector
 from repro.data.datasets import GaussianMixtureDataset
-from repro.data.pipeline import FullSelector
+from repro.selection import MiloSession, MiloSessionConfig
+
+ARTIFACT = "/tmp/milo_quickstart.npz"
 
 
 def main():
-    ds = GaussianMixtureDataset(n=1500, n_classes=6, dim=24, seed=0)
+    ds = GaussianMixtureDataset(n=4000, n_classes=6, dim=32, seed=0)
     tr, va, te = ds.split()
     feats, labs = ds.features()[tr], ds.y[tr]
     tx, ty = ds.features()[te], ds.y[te]
 
-    # --- 1x preprocessing ---------------------------------------------------
-    t0 = time.time()
-    pre = MiloPreprocessor(subset_fraction=0.1, n_sge_subsets=6)
-    md = pre.preprocess(feats, labs, jax.random.PRNGKey(0))
-    md.save("/tmp/milo_quickstart.npz")
-    print(f"preprocessed {len(tr)} samples -> k={md.k} in {time.time()-t0:.1f}s")
+    cfg = MiloSessionConfig(
+        subset_fraction=0.1, n_sge_subsets=6, total_epochs=40,
+        hidden=256, sub_steps=8,          # big enough to be compute-, not
+        metadata_path=ARTIFACT,           # overhead-bound at CPU scale
+    )
+    session = MiloSession(cfg)
 
-    # --- full-data skyline ----------------------------------------------------
-    full = train_with_selector(feats, labs, FullSelector(len(tr)), epochs=40,
-                               test_x=tx, test_y=ty)
-    print(f"FULL       acc={full['final_acc']:.4f}  time={full['train_time']:.1f}s")
+    # --- 1x preprocessing ----------------------------------------------------
+    t0 = time.time()
+    md = session.preprocess(feats, labs, force=True)
+    print(f"preprocessed {len(tr)} samples -> k={md.k} in {time.time()-t0:.1f}s "
+          f"(artifact {ARTIFACT}, config hash {md.config_hash()})")
+
+    # --- full-data skyline ---------------------------------------------------
+    full = session.train(feats, labs, test_x=tx, test_y=ty, selector="full")
+    print(f"FULL       acc={full.final_acc:.4f}  time={full.train_time:.1f}s")
 
     # --- model 1 on MILO subsets ---------------------------------------------
-    sel = MiloSelector(md, CurriculumConfig(total_epochs=40, kappa=1 / 6, R=1))
-    m1 = train_with_selector(feats, labs, sel, epochs=40, test_x=tx, test_y=ty)
-    print(f"MILO (10%) acc={m1['final_acc']:.4f}  time={m1['train_time']:.1f}s  "
-          f"speedup={full['train_time']/m1['train_time']:.1f}x")
+    m1 = session.train(feats, labs, test_x=tx, test_y=ty)
+    print(f"MILO (10%) acc={m1.final_acc:.4f}  time={m1.train_time:.1f}s  "
+          f"speedup={full.train_time/m1.train_time:.1f}x")
 
-    # --- model 2 reuses the metadata (different seed/model init) -------------
-    sel2 = MiloSelector(md, CurriculumConfig(total_epochs=40, kappa=1 / 6, R=1), seed=1)
-    m2 = train_with_selector(feats, labs, sel2, epochs=40, test_x=tx, test_y=ty, seed=1)
-    print(f"MILO again acc={m2['final_acc']:.4f}  (selection cost: 0 — amortized)")
+    # --- model 2: a FRESH session loads the saved artifact -------------------
+    session2 = MiloSession(cfg)
+    session2.preprocess(feats, labs)          # loads; does not recompute
+    assert session2.loaded_from_artifact, "artifact must be reused, not rebuilt"
+    m2 = session2.train(feats, labs, test_x=tx, test_y=ty, seed=1)
+    print(f"MILO again acc={m2.final_acc:.4f}  (selection cost: 0 — amortized; "
+          f"artifact loaded from disk)")
 
 
 if __name__ == "__main__":

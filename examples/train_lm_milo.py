@@ -15,11 +15,12 @@ import jax
 import numpy as np
 
 from repro.configs import registry
-from repro.core import CurriculumConfig, MiloPreprocessor, MiloSelector
+from repro.core import MiloPreprocessor
 from repro.data.datasets import TokenLMDataset
 from repro.data.pipeline import Pipeline
 from repro.optim.optimizers import adamw
 from repro.optim.schedules import cosine
+from repro.selection import build_selector
 from repro.train.train_state import init_train_state, make_train_step
 from repro.train.trainer import Trainer, TrainerConfig
 
@@ -42,7 +43,7 @@ def main():
     batch_size = 16
     steps_per_epoch = md.k // batch_size
     epochs = max(1, args.steps // steps_per_epoch)
-    sel = MiloSelector(md, CurriculumConfig(total_epochs=epochs, kappa=1 / 6, R=1))
+    sel = build_selector("milo", metadata=md, total_epochs=epochs, kappa=1 / 6, R=1)
     pipe = Pipeline(ds.batch, sel, batch_size, seed=0)
 
     opt = adamw()

@@ -1,17 +1,12 @@
-"""Hyper-parameter tuning example: TPE + Hyperband with MILO subsets
-(the paper's 20-75x tuning-speedup pipeline, CPU scale).
+"""Hyper-parameter tuning example: TPE + Hyperband with MILO subsets through
+``MiloSession.tune`` (the paper's 20-75x tuning-speedup pipeline, CPU scale).
 
 Run:  PYTHONPATH=src python examples/tune_hparams.py
 """
 import time
 
-import jax
-
-from benchmarks.common import train_with_selector
-from repro.core import CurriculumConfig, MiloPreprocessor, MiloSelector
 from repro.data.datasets import GaussianMixtureDataset
-from repro.data.pipeline import FullSelector
-from repro.tuning.tuner import TPESearch, hyperband
+from repro.selection import MiloSession, MiloSessionConfig
 
 SPACE = {"lr": ("log", 3e-3, 0.3), "hidden": ("choice", [32, 64, 128])}
 
@@ -22,23 +17,15 @@ def main():
     feats, labs = ds.features()[tr], ds.y[tr]
     vx, vy = ds.features()[va], ds.y[va]
 
-    pre = MiloPreprocessor(subset_fraction=0.1, n_sge_subsets=4)
-    md = pre.preprocess(feats, labs, jax.random.PRNGKey(0))
+    session = MiloSession(MiloSessionConfig(
+        subset_fraction=0.1, n_sge_subsets=4, total_epochs=30, eval_every_epochs=10,
+    ))
+    session.preprocess(feats, labs)
 
-    def make_objective(factory):
-        def objective(cfg, budget):
-            out = train_with_selector(feats, labs, factory(), epochs=max(2, budget),
-                                      test_x=vx, test_y=vy, lr=cfg["lr"], eval_every=10)
-            return out["final_acc"]
-        return objective
-
-    for name, factory in (
-        ("FULL", lambda: FullSelector(len(tr))),
-        ("MILO-10%", lambda: MiloSelector(md, CurriculumConfig(total_epochs=30, kappa=1 / 6))),
-    ):
+    for name in ("full", "milo"):
         t0 = time.time()
-        res = hyperband(make_objective(factory), TPESearch(SPACE, seed=0),
-                        max_budget=9, eta=3)
+        res = session.tune(feats, labs, vx, vy, SPACE,
+                           selector=name, search="tpe", max_budget=9, eta=3)
         print(f"{name:9s} best={res.best_score:.4f} "
               f"config={res.best_config} trials={len(res.trials)} "
               f"wall={time.time()-t0:.1f}s")

@@ -1,2 +1,10 @@
-"""repro: MILO (model-agnostic subset selection) as a production JAX framework."""
-__version__ = "1.0.0"
+"""repro: MILO (model-agnostic subset selection) as a production JAX framework.
+
+``repro.selection`` is the single front door for subset selection::
+
+    from repro.selection import MiloSession, build_selector
+
+Kept import-light on purpose: pulling in the selection engine (and with it
+jax) is the caller's explicit choice.
+"""
+__version__ = "1.1.0"

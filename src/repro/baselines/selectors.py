@@ -1,10 +1,16 @@
 """Subset-selection baselines from the paper's experiments (§4).
 
-All expose the ``Selector`` protocol (``indices_for_epoch``):
+The classes here are the *legacy* entry points exposing the deprecated
+``indices_for_epoch`` protocol; new code should build the same strategies
+through the ``repro.selection`` registry (``build_selector("craig_pb", ...)``)
+which wraps them in the weighted ``SelectionPlan`` protocol.  The actual
+selection math lives in the module-level functions (``craig_pb_select``,
+``gradmatch_omp_select``, ``glister_select``) shared by both paths.
+
+Model-independent strategies (selection cost off the critical path):
 
   RandomSelector          — fixed random subset (paper: RANDOM)
   AdaptiveRandomSelector  — fresh random subset every R epochs (ADAPTIVE-RANDOM)
-  FullSelector            — everything (FULL); see data.pipeline
   MiloFixedSelector       — fixed subset maximizing disparity-min (MILO (Fixed))
   EL2NSelector            — keep hardest/easiest by EL2N score [Paul et al.'21]
   SelfSupPruneSelector    — self-supervised prototype-distance pruning
@@ -38,6 +44,84 @@ from repro.core.greedy import greedy
 from repro.core.similarity import gram_matrix
 from repro.core.submodular import disparity_min, facility_location
 
+
+# --------------------------------------------------------------------------
+# selection math (shared by the legacy classes and repro.selection wrappers)
+# --------------------------------------------------------------------------
+
+def _normalize_weights(w: np.ndarray) -> np.ndarray:
+    """Scale weights to mean 1 so the weighted loss keeps its usual scale."""
+    w = np.asarray(w, np.float32)
+    total = float(w.sum())
+    if not np.isfinite(total) or total <= 0.0:
+        return np.ones_like(w)
+    return w * (len(w) / total)
+
+
+def craig_pb_select(g: np.ndarray, k: int) -> tuple[np.ndarray, np.ndarray]:
+    """CRAIG: facility-location medoids of the gradient-similarity kernel.
+
+    Returns (indices, weights) where weight_j is the mass of the cluster
+    represented by medoid j (CRAIG's γ coefficients), normalized to mean 1.
+    """
+    K = gram_matrix(jnp.asarray(g))
+    idx = np.asarray(greedy(facility_location, K, k).indices, np.int64)
+    # every sample is "covered" by its most similar medoid; the medoid's
+    # loss weight is how many samples it stands in for.  Reduce on device:
+    # only the (n,) assignment vector crosses to the host, not the n^2 kernel
+    assign = np.asarray(jnp.argmax(K[:, jnp.asarray(idx)], axis=1))
+    w = np.bincount(assign, minlength=len(idx)).astype(np.float32)
+    return idx, _normalize_weights(w)
+
+
+def gradmatch_omp_select(
+    g: np.ndarray, k: int, lam: float = 0.5
+) -> tuple[np.ndarray, np.ndarray]:
+    """GRAD-MATCH: OMP-style matching of the mean gradient.
+
+    Returns (indices, weights) with the non-negative OMP coefficients as
+    weights (normalized to mean 1).
+    """
+    g = np.asarray(g, np.float64)
+    target = g.mean(0)
+    residual = target.copy()
+    chosen: list[int] = []
+    coefs: list[float] = []
+    for _ in range(k):
+        scores = g @ residual
+        scores[chosen] = -np.inf
+        j = int(np.argmax(scores))
+        chosen.append(j)
+        # per-element weight via nonneg projection (simplified OMP)
+        denom = (g[j] @ g[j]) + lam
+        w = max(0.0, (g[j] @ residual) / denom)
+        coefs.append(w)
+        residual = residual - w * g[j]
+    return np.asarray(chosen, np.int64), _normalize_weights(np.asarray(coefs))
+
+
+def glister_select(
+    g: np.ndarray, gv: np.ndarray, k: int, eta: float = 0.1
+) -> np.ndarray:
+    """GLISTER: greedy validation-gain selection (bilevel approximation):
+    score(j) ≈ <g_j, g_val> taken greedily with residual updates."""
+    g = np.asarray(g, np.float64)
+    gv = np.asarray(gv, np.float64)
+    chosen: list[int] = []
+    acc = np.zeros_like(gv)
+    for _ in range(k):
+        # validation gain if j's gradient step is added
+        scores = g @ (gv - eta * acc)
+        scores[chosen] = -np.inf
+        j = int(np.argmax(scores))
+        chosen.append(j)
+        acc = acc + g[j]
+    return np.asarray(chosen, np.int64)
+
+
+# --------------------------------------------------------------------------
+# model-independent baselines
+# --------------------------------------------------------------------------
 
 @dataclasses.dataclass
 class RandomSelector:
@@ -144,9 +228,7 @@ class CraigPBSelector:
 
         if epoch % self.R == 0 or not hasattr(self, "_idx"):
             t0 = time.perf_counter()
-            g = jnp.asarray(self.grad_fn())
-            K = gram_matrix(g)  # gradient-similarity kernel
-            self._idx = np.asarray(greedy(facility_location, K, self.k).indices, np.int64)
+            self._idx, self._weights = craig_pb_select(self.grad_fn(), self.k)
             self.selection_time += time.perf_counter() - t0
         return self._idx
 
@@ -166,28 +248,16 @@ class GradMatchPBSelector:
 
         if epoch % self.R == 0 or not hasattr(self, "_idx"):
             t0 = time.perf_counter()
-            g = np.asarray(self.grad_fn(), np.float64)      # (n, d)
-            target = g.mean(0)
-            residual = target.copy()
-            chosen: list[int] = []
-            for _ in range(self.k):
-                scores = g @ residual
-                scores[chosen] = -np.inf
-                j = int(np.argmax(scores))
-                chosen.append(j)
-                # per-element weight via nonneg projection (simplified OMP)
-                denom = (g[j] @ g[j]) + self.lam
-                w = max(0.0, (g[j] @ residual) / denom)
-                residual = residual - w * g[j]
-            self._idx = np.asarray(chosen, np.int64)
+            self._idx, self._weights = gradmatch_omp_select(
+                self.grad_fn(), self.k, self.lam
+            )
             self.selection_time += time.perf_counter() - t0
         return self._idx
 
 
 @dataclasses.dataclass
 class GlisterSelector:
-    """Greedy maximization of validation-set gain (bilevel approximation):
-    score(j) ≈ <g_j, g_val>; taken greedily with residual updates."""
+    """Greedy maximization of validation-set gain (bilevel approximation)."""
 
     grad_fn: Callable[[], np.ndarray]
     val_grad_fn: Callable[[], np.ndarray]
@@ -201,17 +271,8 @@ class GlisterSelector:
 
         if epoch % self.R == 0 or not hasattr(self, "_idx"):
             t0 = time.perf_counter()
-            g = np.asarray(self.grad_fn(), np.float64)
-            gv = np.asarray(self.val_grad_fn(), np.float64)
-            chosen: list[int] = []
-            acc = np.zeros_like(gv)
-            for _ in range(self.k):
-                # validation gain if j's gradient step is added
-                scores = g @ (gv - self.eta * acc)
-                scores[chosen] = -np.inf
-                j = int(np.argmax(scores))
-                chosen.append(j)
-                acc = acc + g[j]
-            self._idx = np.asarray(chosen, np.int64)
+            self._idx = glister_select(
+                self.grad_fn(), self.val_grad_fn(), self.k, self.eta
+            )
             self.selection_time += time.perf_counter() - t0
         return self._idx

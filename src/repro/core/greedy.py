@@ -92,7 +92,10 @@ def stochastic_greedy(
         logits = jnp.where(selected, _NEG, g)
         _, cand = jax.lax.top_k(logits, s)  # (s,) candidate indices
         gains = fn.gains(state, K)          # vectorized over all n; gather s
-        cand_gains = gains[cand]
+        # when s exceeds the unselected pool, top_k pads the candidate set
+        # with already-selected elements — mask their gains so they can never
+        # win the argmax (would duplicate an index in the subset)
+        cand_gains = jnp.where(selected[cand], _NEG, gains[cand])
         best = cand[jnp.argmax(cand_gains)]
         state = fn.update(state, K, best)
         return (

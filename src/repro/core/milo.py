@@ -11,6 +11,11 @@
 returns the subset indices dictated by the easy-to-hard curriculum.  Selection
 cost during training is O(k) (a Gumbel top-k at WRE epochs; a table lookup at
 SGE epochs) — the decoupling that gives the paper its 3-75x speedups.
+
+New code should go through ``repro.selection`` — ``build_selector("milo",
+metadata=..., ...)`` wraps this selector in the weighted ``SelectionPlan``
+protocol, and ``MiloSession`` drives preprocess/train/tune end to end.  The
+``indices_for_epoch`` entry point here is kept for backward compatibility.
 """
 from __future__ import annotations
 
@@ -28,6 +33,18 @@ from repro.core.exploration import taylor_softmax, weighted_sample_without_repla
 from repro.core.metadata import MiloMetadata
 from repro.core.partition import Partition, merge_class_selections, partition_by_class, proportional_budgets
 from repro.core.similarity import gram_matrix_blocked
+
+
+def _normalize_probs(p: np.ndarray) -> np.ndarray:
+    """Normalize to a distribution; degenerate mass (all-zero importance from
+    singleton/degenerate classes, or NaN/inf from pathological features) falls
+    back to uniform so WRE sampling stays well-defined."""
+    p = np.where(np.isfinite(p), p, 0.0).astype(np.float32)
+    p = np.maximum(p, 0.0)
+    total = float(p.sum())
+    if total <= 0.0:
+        return np.full(p.shape, 1.0 / len(p), np.float32)
+    return p / total
 
 
 @dataclasses.dataclass
@@ -57,7 +74,11 @@ class MiloPreprocessor:
         key: jax.Array,
         *,
         encoder_id: str = "precomputed",
+        prep_seed: int | None = None,
     ) -> MiloMetadata:
+        """``prep_seed`` is provenance only: the integer the caller derived
+        ``key`` from, recorded in the artifact config so reuse checks can
+        tell two stochastic-greedy draws apart."""
         features = np.asarray(features)
         m = features.shape[0]
         k = max(1, int(round(self.subset_fraction * m)))
@@ -96,7 +117,7 @@ class MiloPreprocessor:
             p_local = np.asarray(taylor_softmax(jnp.asarray(imp)), np.float32)
             wre_probs[part.indices] = p_local * (n_c / m)
 
-        wre_probs = wre_probs / wre_probs.sum()
+        wre_probs = _normalize_probs(wre_probs)
         sge_subsets = np.stack(
             [
                 merge_class_selections(parts, [s[i] for s in per_class_sge])
@@ -121,6 +142,7 @@ class MiloPreprocessor:
                 classwise=self.classwise,
                 metric=self.metric,
                 encoder_id=encoder_id,
+                prep_seed=prep_seed,
             ),
         )
 

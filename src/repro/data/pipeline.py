@@ -1,14 +1,19 @@
 """Sharded input pipeline with first-class subset selection.
 
-The pipeline owns the *index stream*: each epoch it asks its ``selector``
-(MILO, a baseline, or full-data) for the sample indices to visit, shuffles
-deterministically in (seed, epoch), tiles into global batches, and yields
-host arrays ready for ``jax.device_put`` onto the (pod, data)-sharded batch
-axis.  Everything is a pure function of (seed, epoch, step) — the property
-fault-tolerant restart relies on (distributed/fault_tolerance.py).
+The pipeline owns the *index stream*: each epoch it asks its selector for a
+``repro.selection.SelectionPlan`` (sample indices + per-sample loss weights +
+curriculum phase), shuffles deterministically in (seed, epoch), tiles into
+global batches, and yields host arrays ready for ``jax.device_put`` onto the
+(pod, data)-sharded batch axis.  Plan weights ride along in each batch under
+``weights`` so the loss can consume them (see ``models/lm.loss_fn`` and the
+session classifier).  Legacy selectors exposing only ``indices_for_epoch``
+are still accepted (uniform weights).  Everything is a pure function of
+(seed, epoch, step) — the property fault-tolerant restart relies on
+(distributed/fault_tolerance.py).
 
 Background prefetch: a one-slot daemon thread overlaps host batch assembly
-with device compute.
+with device compute; worker exceptions propagate to the consumer instead of
+silently truncating the epoch.
 """
 from __future__ import annotations
 
@@ -21,17 +26,27 @@ import numpy as np
 
 
 class Selector(Protocol):
+    """Deprecated structural protocol — prefer ``repro.selection.Selector``."""
+
     def indices_for_epoch(self, epoch: int) -> np.ndarray: ...
 
 
 @dataclasses.dataclass
 class FullSelector:
-    """No selection: the whole dataset every epoch."""
+    """No selection: the whole dataset every epoch (legacy protocol; new code
+    should use ``build_selector("full", n=...)``)."""
 
     n: int
 
     def indices_for_epoch(self, epoch: int) -> np.ndarray:
         return np.arange(self.n, dtype=np.int64)
+
+
+class _WorkerError:
+    """Wrapper carrying a prefetch-worker exception across the queue."""
+
+    def __init__(self, exc: BaseException):
+        self.exc = exc
 
 
 @dataclasses.dataclass
@@ -42,30 +57,64 @@ class Pipeline:
     seed: int = 0
     drop_remainder: bool = True
     prefetch: bool = True
+    weight_key: str | None = "weights"         # None disables weight injection
+
+    def __post_init__(self):
+        self._plan_cache: tuple[int, Any] | None = None
+        self._plan_selector: Any = None
+
+    def invalidate_plan_cache(self) -> None:
+        """Drop the memoized epoch plan (e.g. after a selector cache reset)."""
+        self._plan_cache = None
+
+    def plan_for_epoch(self, epoch: int):
+        """The selector's (cached) SelectionPlan for this epoch."""
+        if self._plan_cache is not None and self._plan_cache[0] == epoch:
+            return self._plan_cache[1]
+        if self._plan_selector is None:
+            # deferred: data sits below selection in the layering, so the
+            # adapter import happens at first use, not module import
+            from repro.selection.base import ensure_selector
+
+            self._plan_selector = ensure_selector(self.selector)
+        plan = self._plan_selector.plan(epoch)
+        self._plan_cache = (epoch, plan)
+        return plan
+
+    def _permuted(self, epoch: int) -> tuple[np.ndarray, np.ndarray]:
+        """(indices, weights) in this epoch's deterministic visit order."""
+        plan = self.plan_for_epoch(epoch)
+        rng = np.random.default_rng(self.seed * 1_000_003 + epoch)
+        perm = rng.permutation(len(plan.indices))
+        return plan.indices[perm], plan.weights[perm]
 
     def epoch_indices(self, epoch: int) -> np.ndarray:
-        idx = np.asarray(self.selector.indices_for_epoch(epoch), np.int64)
-        rng = np.random.default_rng(self.seed * 1_000_003 + epoch)
-        return rng.permutation(idx)
+        return self._permuted(epoch)[0]
 
     def steps_per_epoch(self, epoch: int = 0) -> int:
-        n = len(self.epoch_indices(epoch))
+        n = len(self.plan_for_epoch(epoch).indices)
         return n // self.batch_size if self.drop_remainder else -(-n // self.batch_size)
 
     def epoch(self, epoch: int, *, start_step: int = 0) -> Iterator[dict]:
         """Yield batches; ``start_step`` skips ahead for restart replay."""
-        idx = self.epoch_indices(epoch)
+        idx, weights = self._permuted(epoch)
         n_steps = self.steps_per_epoch(epoch)
 
         def gen():
             for s in range(start_step, n_steps):
                 lo = s * self.batch_size
                 sel = idx[lo : lo + self.batch_size]
+                w = weights[lo : lo + self.batch_size]
                 if len(sel) < self.batch_size:
                     if self.drop_remainder:
                         return
-                    sel = np.pad(sel, (0, self.batch_size - len(sel)), mode="wrap")
-                yield self.make_batch(sel)
+                    pad = self.batch_size - len(sel)
+                    sel = np.pad(sel, (0, pad), mode="wrap")
+                    w = np.pad(w, (0, pad), mode="wrap")
+                b = self.make_batch(sel)
+                if self.weight_key and self.weight_key not in b:
+                    b[self.weight_key] = w.copy()
+                yield b
 
         if not self.prefetch:
             yield from gen()
@@ -77,7 +126,9 @@ class Pipeline:
             try:
                 for b in gen():
                     q.put(b)
-            finally:
+            except BaseException as e:  # noqa: BLE001 — re-raised in consumer
+                q.put(_WorkerError(e))
+            else:
                 q.put(_SENTINEL)
 
         t = threading.Thread(target=worker, daemon=True)
@@ -86,4 +137,6 @@ class Pipeline:
             b = q.get()
             if b is _SENTINEL:
                 break
+            if isinstance(b, _WorkerError):
+                raise b.exc
             yield b

@@ -85,7 +85,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool, out_dir: str | None
         from repro.launch import hlo_analysis
 
         mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis()
+        cost = hlo_analysis.xla_cost(compiled)
         hlo_text = compiled.as_text()
         totals = hlo_analysis.analyze(hlo_text)
         rec.update(

@@ -4,21 +4,39 @@ Defined as functions (never module-level constants) so importing this module
 never touches jax device state — ``dryrun.py`` must set
 ``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* first jax
 init, and smoke tests must keep seeing 1 device.
+
+``make_mesh`` papers over the jax API drift around explicit axis types:
+``jax.sharding.AxisType`` (and ``jax.make_mesh``'s ``axis_types`` kwarg)
+only exist on newer jax; older versions get the positional call, which
+defaults every axis to Auto anyway.
 """
 from __future__ import annotations
 
+from typing import Sequence
+
 import jax
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str]):
+    """Version-compatible ``jax.make_mesh`` with all axes typed Auto."""
+    axis_type = getattr(getattr(jax.sharding, "AxisType", None), "Auto", None)
+    if axis_type is not None:
+        try:
+            return jax.make_mesh(
+                tuple(shape), tuple(axes), axis_types=(axis_type,) * len(axes)
+            )
+        except TypeError:  # jax exposes AxisType but not the kwarg
+            pass
+    return jax.make_mesh(tuple(shape), tuple(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    kinds = (jax.sharding.AxisType.Auto,) * len(axes)
-    return jax.make_mesh(shape, axes, axis_types=kinds)
+    return make_mesh(shape, axes)
 
 
 def make_debug_mesh(n_data: int = 1, n_model: int = 1):
     """Tiny mesh over however many (possibly forced-host) devices exist."""
-    kinds = (jax.sharding.AxisType.Auto,) * 2
-    return jax.make_mesh((n_data, n_model), ("data", "model"), axis_types=kinds)
+    return make_mesh((n_data, n_model), ("data", "model"))

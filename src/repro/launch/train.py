@@ -31,15 +31,14 @@ def main() -> None:
     args = ap.parse_args()
 
     import jax
-    import numpy as np
 
-    from repro.baselines.selectors import AdaptiveRandomSelector, MiloFixedSelector, RandomSelector
     from repro.configs import registry
-    from repro.core import CurriculumConfig, MiloPreprocessor, MiloSelector
+    from repro.core import MiloPreprocessor
     from repro.data.datasets import TokenLMDataset
-    from repro.data.pipeline import FullSelector, Pipeline
+    from repro.data.pipeline import Pipeline
     from repro.optim.optimizers import adamw
     from repro.optim.schedules import cosine
+    from repro.selection import build_selector
     from repro.train.train_state import init_train_state, make_train_step
     from repro.train.trainer import Trainer, TrainerConfig
 
@@ -49,23 +48,22 @@ def main() -> None:
 
     ds = TokenLMDataset(n_docs=args.n_docs, seq_len=64, vocab=cfg.vocab_size, seed=args.seed)
     t0 = time.time()
+    k = max(1, int(ds.n * args.subset_fraction))
     if args.selector == "milo":
         pre = MiloPreprocessor(subset_fraction=args.subset_fraction, n_sge_subsets=4,
                                classwise=False)
         md = pre.preprocess(ds.features(), None, jax.random.PRNGKey(args.seed))
-        selector = MiloSelector(md, CurriculumConfig(total_epochs=args.epochs), seed=args.seed)
+        selector = build_selector("milo", metadata=md, total_epochs=args.epochs,
+                                  seed=args.seed)
         k = md.k
     elif args.selector == "random":
-        k = int(ds.n * args.subset_fraction)
-        selector = RandomSelector(ds.n, k, args.seed)
+        selector = build_selector("random", n=ds.n, k=k, seed=args.seed)
     elif args.selector == "adaptive_random":
-        k = int(ds.n * args.subset_fraction)
-        selector = AdaptiveRandomSelector(ds.n, k, seed=args.seed)
+        selector = build_selector("adaptive_random", n=ds.n, k=k, seed=args.seed)
     elif args.selector == "milo_fixed":
-        k = int(ds.n * args.subset_fraction)
-        selector = MiloFixedSelector(ds.features(), k)
+        selector = build_selector("milo_fixed", features=ds.features(), k=k)
     else:
-        selector = FullSelector(ds.n)
+        selector = build_selector("full", n=ds.n)
         k = ds.n
     preprocess_s = time.time() - t0
 

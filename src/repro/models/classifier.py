@@ -1,0 +1,51 @@
+"""Small MLP classifier shared by the session facade and the benchmarks.
+
+One definition of the downstream model and its training math, so the
+benchmark numbers and ``MiloSession.train`` can never diverge: 3-layer ReLU
+MLP, per-sample weighted cross entropy ``sum(w * nll) / max(sum(w), 1)``
+(uniform weights reduce to plain CE), accuracy, and the Nesterov-momentum
+update.  Only the loop structure (epoch-based full-batch benchmark vs
+in-jit scan with a traced cosine schedule) lives with the callers.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense, init_dense
+
+
+def init_mlp(key, d_in: int, n_classes: int, hidden: int = 64) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w1": init_dense(k1, d_in, hidden, jnp.float32), "b1": jnp.zeros((hidden,)),
+        "w2": init_dense(k2, hidden, hidden, jnp.float32), "b2": jnp.zeros((hidden,)),
+        "w3": init_dense(k3, hidden, n_classes, jnp.float32), "b3": jnp.zeros((n_classes,)),
+    }
+
+
+def mlp_logits(p: dict, x: jax.Array) -> jax.Array:
+    h = jax.nn.relu(dense(x, p["w1"]) + p["b1"])
+    h = jax.nn.relu(dense(h, p["w2"]) + p["b2"])
+    return dense(h, p["w3"]) + p["b3"]
+
+
+def weighted_nll(p: dict, x: jax.Array, y: jax.Array, w: jax.Array) -> jax.Array:
+    """Plan-weighted cross entropy (the loss every selection plan feeds)."""
+    lp = jax.nn.log_softmax(mlp_logits(p, x))
+    nll = -jnp.take_along_axis(lp, y[:, None], 1)[:, 0]
+    return jnp.sum(nll * w) / jnp.maximum(jnp.sum(w), 1.0)
+
+
+@jax.jit
+def accuracy(p: dict, x: jax.Array, y: jax.Array) -> jax.Array:
+    return jnp.mean(jnp.argmax(mlp_logits(p, x), -1) == y)
+
+
+def nesterov_update(params: dict, mom: dict, grads: dict, lr, beta: float = 0.9):
+    """One Nesterov-momentum SGD step; returns (params, mom)."""
+    mom = jax.tree.map(lambda m, g: beta * m + g, mom, grads)
+    params = jax.tree.map(
+        lambda p, m, g: p - lr * (g + beta * m), params, mom, grads
+    )
+    return params, mom

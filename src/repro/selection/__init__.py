@@ -1,0 +1,65 @@
+"""repro.selection — the single front door for subset selection.
+
+* ``SelectionPlan`` / ``Selector`` — the weighted per-epoch protocol
+  (indices + loss weights + phase + provenance) replacing bare
+  ``indices_for_epoch`` index arrays.
+* ``build_selector(name, **cfg)`` — registry factory covering MILO,
+  MILO-Fixed, Random, AdaptiveRandom, EL2N, SelfSupPrune, CRAIG-PB,
+  GRAD-MATCH-PB, GLISTER, and Full.
+* ``MiloSession`` — one-call facade: ``preprocess() / train() / tune()``.
+"""
+from repro.selection.plan import PHASES, SelectionPlan, uniform_plan
+from repro.selection.base import LegacySelectorAdapter, Selector, ensure_selector
+from repro.selection.registry import (
+    SelectorEntry,
+    available_selectors,
+    build_selector,
+    iter_entries,
+    register,
+    selector_entry,
+)
+from repro.selection.selectors import (
+    AdaptiveRandomConfig,
+    CraigPBConfig,
+    EL2NConfig,
+    FullConfig,
+    GlisterConfig,
+    GradMatchPBConfig,
+    MiloConfig,
+    MiloFixedConfig,
+    RandomConfig,
+    SelfSupPruneConfig,
+)
+from repro.selection.session import (
+    MiloSession,
+    MiloSessionConfig,
+    TrainReport,
+)
+
+__all__ = [
+    "PHASES",
+    "SelectionPlan",
+    "Selector",
+    "SelectorEntry",
+    "LegacySelectorAdapter",
+    "ensure_selector",
+    "uniform_plan",
+    "register",
+    "build_selector",
+    "available_selectors",
+    "iter_entries",
+    "selector_entry",
+    "MiloSession",
+    "MiloSessionConfig",
+    "TrainReport",
+    "MiloConfig",
+    "MiloFixedConfig",
+    "FullConfig",
+    "RandomConfig",
+    "AdaptiveRandomConfig",
+    "EL2NConfig",
+    "SelfSupPruneConfig",
+    "CraigPBConfig",
+    "GradMatchPBConfig",
+    "GlisterConfig",
+]

@@ -1,0 +1,84 @@
+"""``Selector`` ABC — the single selection protocol.
+
+Every strategy (MILO, the paper baselines, full-data) implements
+``plan(epoch) -> SelectionPlan``.  The old ``indices_for_epoch`` entry point
+survives as a thin deprecation shim on the ABC, and ``ensure_selector``
+adapts legacy objects that only speak the old protocol so existing call
+sites keep working during the migration.
+"""
+from __future__ import annotations
+
+import abc
+import warnings
+from typing import Any
+
+import numpy as np
+
+from repro.selection.plan import SelectionPlan, uniform_plan
+
+
+class Selector(abc.ABC):
+    """Per-epoch subset server.  Implementations must be deterministic in
+    (their configured seed, epoch) so fault-tolerant restarts replay the
+    identical data order."""
+
+    @abc.abstractmethod
+    def plan(self, epoch: int) -> SelectionPlan:
+        """The subset (indices + weights + phase + provenance) for ``epoch``."""
+
+    def reset_cache(self) -> None:
+        """Drop any memoized plans (used by benchmarks after jit warm-up)."""
+
+    # -- deprecation shim ---------------------------------------------------
+    def indices_for_epoch(self, epoch: int) -> np.ndarray:
+        """Deprecated: use ``plan(epoch).indices``."""
+        warnings.warn(
+            "indices_for_epoch is deprecated; use plan(epoch).indices",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        return self.plan(epoch).indices
+
+
+class LegacySelectorAdapter(Selector):
+    """Wraps an object exposing only ``indices_for_epoch`` into the plan
+    protocol with uniform weights.
+
+    Phase tags are inferred from the wrapped object so downstream consumers
+    (warm-up gating, trainer history) behave the same as with first-class
+    selectors: a ``curriculum`` attribute yields its sge/wre phase (legacy
+    ``MiloSelector``), an ``R`` re-selection interval tags ``adaptive``, and
+    everything else is ``fixed``."""
+
+    def __init__(self, legacy: Any):
+        if not hasattr(legacy, "indices_for_epoch"):
+            raise TypeError(
+                f"{type(legacy).__name__} implements neither plan() nor "
+                "indices_for_epoch()"
+            )
+        self.legacy = legacy
+
+    def _phase(self, epoch: int) -> str:
+        curriculum = getattr(self.legacy, "curriculum", None)
+        if curriculum is not None and hasattr(curriculum, "phase"):
+            return curriculum.phase(epoch)
+        if getattr(self.legacy, "R", None):
+            return "adaptive"
+        return "fixed"
+
+    def plan(self, epoch: int) -> SelectionPlan:
+        idx = np.asarray(self.legacy.indices_for_epoch(epoch), np.int64)
+        return uniform_plan(
+            idx, self._phase(epoch), epoch, adapter=type(self.legacy).__name__
+        )
+
+    def reset_cache(self) -> None:
+        if hasattr(self.legacy, "_cache_epoch"):
+            self.legacy._cache_epoch = -1
+
+
+def ensure_selector(obj: Any) -> Selector:
+    """Coerce ``obj`` to the plan protocol (identity for new-style selectors)."""
+    if isinstance(obj, Selector) or hasattr(obj, "plan"):
+        return obj
+    return LegacySelectorAdapter(obj)

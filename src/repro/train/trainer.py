@@ -2,11 +2,17 @@
 distributed mesh.  This is deliverable (b)'s end-to-end driver substrate.
 
 The trainer composes:
-  * a ``Pipeline`` whose selector is MILO (or any baseline),
+  * a ``Pipeline`` whose selector is any ``repro.selection`` registry entry
+    (MILO or a baseline); the selector's per-sample plan weights arrive in
+    each batch under ``weights`` and are consumed by the loss,
   * a jit'd train step (optimizer + schedule + clipping),
   * ``CheckpointManager`` (atomic, async, keep-last-k),
   * ``StragglerMonitor``,
   * deterministic (seed, epoch, step) replay on restart.
+
+Logged history records carry the curriculum ``phase`` (sge/wre/fixed/
+adaptive) the epoch's subset came from, so loss curves can be segmented by
+selection regime.
 """
 from __future__ import annotations
 
@@ -43,7 +49,9 @@ class Trainer:
         eval_fn: Callable[[TrainState], dict] | None = None,
         put_batch: Callable[[dict], dict] | None = None,
     ):
-        self.train_step = jax.jit(train_step)
+        # respect pre-jitted steps (they expose .lower): re-wrapping would
+        # give each Trainer its own compilation cache and defeat sharing
+        self.train_step = train_step if hasattr(train_step, "lower") else jax.jit(train_step)
         self.pipeline = pipeline
         self.tcfg = tcfg
         self.eval_fn = eval_fn
@@ -53,6 +61,14 @@ class Trainer:
             CheckpointManager(tcfg.checkpoint_dir) if tcfg.checkpoint_dir else None
         )
         self.history: list[dict] = []
+
+    def _epoch_phase(self, epoch: int) -> str | None:
+        """Curriculum phase of this epoch's SelectionPlan (None for custom
+        pipelines that don't expose plans)."""
+        plan_fn = getattr(self.pipeline, "plan_for_epoch", None)
+        if plan_fn is None:
+            return None
+        return plan_fn(epoch).phase
 
     def _maybe_restore(self, state: TrainState) -> tuple[TrainState, int]:
         if self.ckpt is None:
@@ -73,6 +89,7 @@ class Trainer:
         start_step = global_step % max(steps_per_epoch, 1)
 
         for epoch in range(start_epoch, self.tcfg.epochs):
+            phase = self._epoch_phase(epoch)
             for batch in self.pipeline.epoch(epoch, start_step=start_step if epoch == start_epoch else 0):
                 self.monitor.start()
                 state, metrics = self.train_step(state, self.put_batch(batch))
@@ -82,6 +99,8 @@ class Trainer:
                     rec = {k: float(v) for k, v in metrics.items()}
                     rec.update(step=global_step, epoch=epoch,
                                wall=round(time.time() - t0, 2), straggler=slow)
+                    if phase is not None:
+                        rec["phase"] = phase
                     self.history.append(rec)
                 if (
                     self.ckpt is not None

@@ -4,7 +4,9 @@ AUTOMATA-style pipeline of paper §4 / Fig. 8.
 
 Components (paper's three):
   a) search algorithms  — RandomSearch, TPESearch (kernel-density TPE),
-  b) config evaluation  — ``objective(config, budget_epochs, selector)``,
+  b) config evaluation  — ``objective(config, budget_epochs)``; use
+     ``subset_objective`` to wire a ``repro.selection`` registry selector
+     into every evaluation,
   c) scheduler          — Hyperband successive halving.
 """
 from __future__ import annotations
@@ -103,6 +105,21 @@ class HyperbandResult:
     trials: list[dict]
     total_epochs: int
     wall_time: float
+
+
+def subset_objective(
+    train_fn: Callable[[dict, int, Any], float],
+    selector_factory: Callable[[int], Any],
+) -> Callable[[dict, int], float]:
+    """Adapt a (config, budget, selector) -> score trainer to hyperband's
+    two-argument objective protocol, building a fresh subset selector (e.g.
+    from ``repro.selection.build_selector``) for each evaluation so trials
+    never share per-epoch draw state."""
+
+    def objective(cfg: dict, budget: int) -> float:
+        return train_fn(cfg, budget, selector_factory(budget))
+
+    return objective
 
 
 def hyperband(

@@ -14,8 +14,8 @@ from repro.launch import specs, hlo_analysis
 from repro.optim.optimizers import adamw
 from repro.train import train_state as ts
 
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((4, 2), ("data", "model"))
 opt = adamw()
 # reduced config but the REAL dry-run path: sharded abstract inputs,
 # lower + compile + analyze, train and decode kinds
