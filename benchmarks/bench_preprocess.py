@@ -1,7 +1,25 @@
 """Paper App. H.3: pre-processing cost and its amortization, plus selection
-throughput microbenchmarks (the jit-compiled greedy engines)."""
+throughput microbenchmarks (the jit-compiled greedy engines).
+
+The SGE-bank section is the PR-over-PR perf trajectory for the selection hot
+path (recorded in ``BENCH_selection.json`` by ``benchmarks.run``):
+
+  * ``sge_seq_full``   — the legacy path: one dispatch per run, O(n²) full
+                         gain vector per step (``gains_at`` disabled).
+  * ``sge_vmap_gather``— the fused path: whole bank in one XLA program,
+                         O(n·s) candidate-gather gains per step.
+  * ``sge_gram_free``  — the fused path over features only (no Gram matrix
+                         anywhere): the route that scales past the O(n²)
+                         memory wall (n=32768 Gram would be 4.3 GB fp32).
+
+``BENCH_FAST=1`` keeps small-n cases only (CI smoke); the Pallas gram-free
+kernel is always exercised once in interpret mode so kernel regressions show
+up on every push, not only under pytest.
+"""
 from __future__ import annotations
 
+import dataclasses
+import os
 import time
 
 import jax
@@ -10,15 +28,98 @@ import numpy as np
 
 from benchmarks.common import csv_row
 from repro.core import MiloPreprocessor, gram_matrix, greedy, sge, stochastic_greedy
+from repro.core.gram_free import make_gram_free_facility_location
 from repro.core.greedy import stochastic_candidate_count
+from repro.core.similarity import normalize_rows
 from repro.core.submodular import facility_location, graph_cut
 from repro.data.datasets import GaussianMixtureDataset
 
 
+def _timeit(fn, reps: int = 3) -> float:
+    fn()  # compile / warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps
+
+
+def _features(n: int, d: int = 64, seed: int = 0) -> jnp.ndarray:
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+
+
+def _bench_sge_bank(rows: list[str], verbose: bool, fast: bool) -> None:
+    """Before/after for the tentpole: sequential full-gains vs vmapped
+    candidate-gather vs gram-free, at n ∈ {2048, 8192, 32768}."""
+    n_subsets = 2
+    eps = 0.01
+    sizes = (2048,) if fast else (2048, 8192, 32768)
+    seq_full_max_n = 8192  # the legacy path's K + per-step O(n²) beyond this
+                           # is exactly the wall this PR removes
+    for n in sizes:
+        z = _features(n)
+        k = max(1, n // 20)
+        s = stochastic_candidate_count(n, k, eps)
+        meta = f"k={k} s={s} n_subsets={n_subsets}"
+        timings: dict[str, float] = {}
+
+        if n <= seq_full_max_n:
+            K = gram_matrix(z)
+            # the pre-PR path: gains_at disabled -> full O(n²) gain vector
+            # per step, one dispatch per bank entry
+            fn_full = dataclasses.replace(facility_location, gains_at=None)
+            timings["seq_full"] = _timeit(
+                lambda: jax.block_until_ready(
+                    sge(fn_full, K, k, jax.random.PRNGKey(0),
+                        n_subsets=n_subsets, eps=eps, vmapped=False)
+                ),
+                reps=1 if n > 2048 else 2,
+            )
+            rows.append(csv_row(f"preprocess/sge_seq_full_n{n}",
+                                timings["seq_full"] * 1e6, meta))
+            if verbose:
+                print(rows[-1])
+
+            timings["vmap_gather"] = _timeit(
+                lambda: jax.block_until_ready(
+                    sge(facility_location, K, k, jax.random.PRNGKey(0),
+                        n_subsets=n_subsets, eps=eps, vmapped=True)
+                ),
+            )
+            speedup = timings["seq_full"] / max(timings["vmap_gather"], 1e-9)
+            rows.append(csv_row(f"preprocess/sge_vmap_gather_n{n}",
+                                timings["vmap_gather"] * 1e6,
+                                f"{meta} speedup_vs_seq_full={speedup:.1f}x"))
+            if verbose:
+                print(rows[-1])
+            del K
+
+        # gram-free: no (n, n) Gram anywhere — the only route at n=32768+.
+        # Same set function (facility location) as the columns above, so the
+        # comparison isolates gram-freedom, not a cheaper objective.
+        zn = normalize_rows(z)
+        fn_gf = make_gram_free_facility_location()
+        timings["gram_free"] = _timeit(
+            lambda: jax.block_until_ready(
+                sge(fn_gf, zn, k, jax.random.PRNGKey(0),
+                    n_subsets=n_subsets, eps=eps, vmapped=True)
+            ),
+        )
+        gram_mb = n * n * 4 / 2**20
+        feat_mb = z.size * 4 / 2**20
+        rows.append(csv_row(
+            f"preprocess/sge_gram_free_n{n}", timings["gram_free"] * 1e6,
+            f"{meta} mem_mb={feat_mb:.1f} gram_would_be_mb={gram_mb:.0f}"))
+        if verbose:
+            print(rows[-1])
+
+
 def run(verbose: bool = True) -> list[str]:
+    fast = os.environ.get("BENCH_FAST") == "1"
     rows = []
-    # full preprocessing wall time vs dataset size
-    for n in (1000, 4000):
+    # full preprocessing wall time vs dataset size (default path: bucketed,
+    # vmapped bank, candidate-gather gains)
+    for n in (1000,) if fast else (1000, 4000):
         ds = GaussianMixtureDataset(n=n, n_classes=10, dim=32, seed=0)
         pre = MiloPreprocessor(subset_fraction=0.1, n_sge_subsets=4, gram_block=1024)
         t0 = time.perf_counter()
@@ -31,29 +132,41 @@ def run(verbose: bool = True) -> list[str]:
 
     # jit-compiled greedy engine throughput (whole-run-on-device; the
     # beyond-paper replacement for submodlib's per-element host loop)
-    rng = np.random.default_rng(0)
-    z = jnp.asarray(rng.normal(size=(2048, 64)).astype(np.float32))
+    z = _features(2048)
     K = gram_matrix(z)
     for name, fn in (("facility_location", facility_location), ("graph_cut", graph_cut)):
         k = 205
-        greedy(fn, K, k).indices.block_until_ready()  # compile
-        t0 = time.perf_counter()
-        reps = 3
-        for _ in range(reps):
-            greedy(fn, K, k).indices.block_until_ready()
-        dt = (time.perf_counter() - t0) / reps
+        dt = _timeit(lambda: greedy(fn, K, k).indices.block_until_ready())
         rows.append(csv_row(f"preprocess/greedy_{name}_n2048_k205", dt * 1e6,
                             f"per_element_us={dt/k*1e6:.1f}"))
         if verbose:
             print(rows[-1])
 
     s = stochastic_candidate_count(2048, 205, 0.01)
-    stochastic_greedy(facility_location, K, 205, jax.random.PRNGKey(0), s=s).indices.block_until_ready()
-    t0 = time.perf_counter()
-    stochastic_greedy(facility_location, K, 205, jax.random.PRNGKey(1), s=s).indices.block_until_ready()
-    dt = time.perf_counter() - t0
+    dt = _timeit(lambda: stochastic_greedy(
+        facility_location, K, 205, jax.random.PRNGKey(1), s=s
+    ).indices.block_until_ready())
     rows.append(csv_row("preprocess/stochastic_greedy_n2048_k205", dt * 1e6,
                         f"candidates_per_step={s}"))
+    if verbose:
+        print(rows[-1])
+    del K
+
+    _bench_sge_bank(rows, verbose, fast)
+
+    # Pallas gram-free FL kernel smoke (interpret mode off-TPU): exercises the
+    # fused-similarity kernel on every benchmark run, including CI
+    from repro.kernels.fl_gains import ops as fl_ops
+
+    interpret = jax.default_backend() != "tpu"
+    zn = normalize_rows(_features(256, d=32))
+    c = jnp.zeros((256,))
+    dt = _timeit(lambda: jax.block_until_ready(
+        fl_ops.fl_gains_gram_free(zn, zn[:128], c, block_i=128, block_j=128,
+                                  interpret=interpret)
+    ), reps=1)
+    rows.append(csv_row("preprocess/fl_gains_gram_free_pallas_n256",
+                        dt * 1e6, f"interpret={interpret} n_cand=128"))
     if verbose:
         print(rows[-1])
     return rows

@@ -1,24 +1,87 @@
 """Benchmark master: one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows.  Set ``BENCH_FAST=1`` to run a
-reduced subset (CI smoke).
+Prints ``name,us_per_call,derived`` CSV rows and merges every measured row
+into ``BENCH_selection.json`` (override the path with ``BENCH_JSON``;
+``BENCH_JSON=0`` disables the write) so the perf trajectory is
+machine-readable across PRs, not just printed.  Set ``BENCH_FAST=1`` to run
+a reduced subset (CI smoke); pass module names as argv to run a subset,
+e.g. ``python -m benchmarks.run preprocess kernels``.
 
   bench_set_functions  — Fig. 4 (set-function composition)
   bench_exploration    — Fig. 5 (SGE vs WRE vs curriculum)
   bench_training       — Fig. 6 / Tab. 5,7 (MILO vs baselines, speedup/deg)
   bench_tuning         — Fig. 7 / Tab. 9,10 (hparam tuning + Kendall-tau)
   bench_ablations      — Tab. 1,2,13,14 (hardness, kappa, R)
-  bench_preprocess     — App. H.3 (preprocess cost, greedy throughput)
+  bench_preprocess     — App. H.3 (preprocess cost, greedy/SGE throughput)
   bench_kernels        — kernel microbenches
 """
 from __future__ import annotations
 
+import datetime
+import json
 import os
 import sys
 import time
 
+DEFAULT_JSON_PATH = "BENCH_selection.json"
 
-def main() -> None:
+
+def parse_row(row: str) -> tuple[str, dict] | None:
+    """``name,us_per_call,derived`` -> (name, record); None for non-rows."""
+    if row.startswith("#"):
+        return None
+    parts = row.split(",", 2)
+    if len(parts) != 3:
+        return None
+    name, us, derived = parts
+    try:
+        return name, {"us_per_call": float(us), "derived": derived}
+    except ValueError:
+        return None
+
+
+def write_json(rows: list[str], path: str) -> None:
+    """Merge measured rows into the JSON trajectory file keyed by benchmark
+    name, so partial runs (module subsets, BENCH_FAST) refresh their own
+    entries without clobbering the rest.  Each record carries backend/fast
+    metadata so a CPU smoke row is never mistaken for a TPU trajectory
+    point."""
+    try:
+        import jax
+
+        backend = jax.default_backend()
+    except Exception:  # benchmarks ran, so this is near-impossible; be safe
+        backend = "unknown"
+    fast = os.environ.get("BENCH_FAST") == "1"
+    doc: dict = {"format": "bench-selection", "version": 1, "benchmarks": {}}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                prev = json.load(f)
+            if isinstance(prev.get("benchmarks"), dict):
+                doc["benchmarks"] = prev["benchmarks"]
+        except (json.JSONDecodeError, OSError):
+            pass  # unreadable trajectory file: start fresh rather than crash
+    stamp = datetime.datetime.now(datetime.timezone.utc).isoformat(timespec="seconds")
+    for row in rows:
+        parsed = parse_row(row)
+        if parsed is None:
+            continue
+        name, rec = parsed
+        rec["measured_at"] = stamp
+        rec["backend"] = backend
+        if fast:
+            rec["bench_fast"] = True
+        doc["benchmarks"][name] = rec
+    doc["updated"] = stamp
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    os.replace(tmp, path)
+
+
+def main(argv: list[str] | None = None) -> None:
     from benchmarks import (
         bench_ablations,
         bench_exploration,
@@ -29,6 +92,7 @@ def main() -> None:
         bench_tuning,
     )
 
+    argv = sys.argv[1:] if argv is None else argv
     fast = os.environ.get("BENCH_FAST") == "1"
     modules = [
         ("set_functions", bench_set_functions),
@@ -39,22 +103,34 @@ def main() -> None:
         ("preprocess", bench_preprocess),
         ("kernels", bench_kernels),
     ]
-    if fast:
+    if argv:
+        known = {name for name, _ in modules}
+        unknown = [a for a in argv if a not in known]
+        if unknown:
+            raise SystemExit(f"unknown benchmark modules {unknown}; available: {sorted(known)}")
+        modules = [m for m in modules if m[0] in argv]
+    elif fast:
         modules = [m for m in modules if m[0] in ("preprocess", "kernels")]
 
     print("name,us_per_call,derived")
     t0 = time.time()
     failures = 0
+    all_rows: list[str] = []
     for name, mod in modules:
         t1 = time.time()
         try:
             rows = mod.run(verbose=False)
+            all_rows.extend(rows)
             for r in rows:
                 print(r, flush=True)
             print(f"# {name} done in {time.time()-t1:.1f}s", flush=True)
         except Exception as e:  # pragma: no cover
             failures += 1
             print(f"# {name} FAILED: {type(e).__name__}: {e}", flush=True)
+    json_path = os.environ.get("BENCH_JSON", DEFAULT_JSON_PATH)
+    if all_rows and json_path != "0":
+        write_json(all_rows, json_path)
+        print(f"# wrote {json_path}")
     print(f"# total {time.time()-t0:.1f}s, failures={failures}")
     sys.exit(1 if failures else 0)
 

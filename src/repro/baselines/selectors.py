@@ -152,12 +152,26 @@ class AdaptiveRandomSelector:
 
 @dataclasses.dataclass
 class MiloFixedSelector:
-    """Fixed subset maximizing disparity-min over frozen-encoder features."""
+    """Fixed subset maximizing disparity-min over frozen-encoder features.
+
+    ``gram_free=True`` runs the selection directly over row-normalized
+    features (O(n·d) memory) instead of materializing the (n, n) Gram —
+    identical trajectories, see ``repro.core.gram_free``.
+    """
 
     features: np.ndarray
     k: int
+    gram_free: bool = False
 
     def __post_init__(self):
+        if self.gram_free:
+            from repro.core.gram_free import make_gram_free_disparity_min
+            from repro.core.similarity import normalize_rows
+
+            z = normalize_rows(jnp.asarray(self.features, jnp.float32))
+            fn = make_gram_free_disparity_min()
+            self._idx = np.asarray(greedy(fn, z, self.k).indices, np.int64)
+            return
         K = gram_matrix(jnp.asarray(self.features))
         self._idx = np.asarray(greedy(disparity_min, K, self.k).indices, np.int64)
 

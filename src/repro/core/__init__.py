@@ -7,6 +7,13 @@ from repro.core.exploration import (
     taylor_softmax,
     weighted_sample_without_replacement,
 )
+from repro.core.gram_free import (
+    get_gram_free,
+    make_gram_free_disparity_min,
+    make_gram_free_disparity_sum,
+    make_gram_free_facility_location,
+    make_gram_free_graph_cut,
+)
 from repro.core.greedy import GreedyResult, greedy, greedy_importance, sge, stochastic_greedy
 from repro.core.metadata import MiloMetadata, is_preprocessed
 from repro.core.milo import MiloPreprocessor, MiloSelector, preprocess_with_encoder
@@ -33,12 +40,17 @@ __all__ = [
     "disparity_min",
     "disparity_sum",
     "facility_location",
+    "get_gram_free",
     "gram_matrix",
     "gram_matrix_blocked",
     "graph_cut",
     "greedy",
     "greedy_importance",
     "is_preprocessed",
+    "make_gram_free_disparity_min",
+    "make_gram_free_disparity_sum",
+    "make_gram_free_facility_location",
+    "make_gram_free_graph_cut",
     "make_graph_cut",
     "preprocess_with_encoder",
     "sge",

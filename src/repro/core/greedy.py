@@ -2,15 +2,28 @@
 
 Beyond-paper TPU adaptation: the reference implementation (submodlib) runs one
 Python/C++ heap iteration per selected element on the host.  Here an *entire*
-greedy run — all k steps, each with vectorized gain evaluation over every
-candidate — compiles to a single XLA program via ``lax.fori_loop``.  The
-stochastic-greedy candidate draw uses Gumbel top-k so no host round-trip or
-rejection loop is needed.
+greedy run — all k steps — compiles to a single XLA program via
+``lax.fori_loop``, and the full SGE bank (all ``n_subsets`` stochastic-greedy
+runs) compiles to ONE program via ``vmap`` over the per-run keys.
+
+Cost model per stochastic-greedy step: the candidate set has size
+``s = (n/k)·ln(1/eps)`` and only those ``s`` gains are ever compared, so the
+step evaluates them directly through ``SetFunction.gains_at`` — O(n·s) for
+facility location, O(s) for graph-cut/disparity — instead of materializing
+the O(n²) full gain vector and gathering.  The candidate draw uses Gumbel
+top-k so no host round-trip or rejection loop is needed.
+
+All engines accept an optional ``valid`` mask (shape ``(n,)`` bool): invalid
+elements are treated as pre-selected and can never be chosen.  This is what
+lets ``MiloPreprocessor`` bucket per-class problem sizes to powers of two
+(exact masking, no recompile per distinct class size).
 
 Engines:
   * ``greedy``            — lazy-free naive greedy (exact argmax each step).
   * ``stochastic_greedy`` — [Mirzasoleiman et al. '15]; candidate set of size
                             s = (n/k) * log(1/eps) per step (paper SGE inner).
+  * ``sge``               — the full bank: vmapped by default, sequential for
+                            A/B comparison.
   * ``greedy_importance`` — full greedy pass over the ground set recording the
                             marginal gain of every element at its inclusion
                             point (paper Alg. 3, feeds WRE).
@@ -24,7 +37,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.submodular import SetFunction
+from repro.core.submodular import SetFunction, gains_at as _gains_at
 
 _NEG = -1e30
 
@@ -38,8 +51,18 @@ def _masked_argmax(gains: jax.Array, selected: jax.Array) -> jax.Array:
     return jnp.argmax(jnp.where(selected, _NEG, gains))
 
 
+def _selected0(n: int, valid: jax.Array | None) -> jax.Array:
+    """Initial selected mask: invalid (padding) elements start pre-selected so
+    no engine can ever pick them — the exact-masking half of size bucketing."""
+    if valid is None:
+        return jnp.zeros((n,), bool)
+    return ~valid
+
+
 @functools.partial(jax.jit, static_argnames=("fn", "k"))
-def greedy(fn: SetFunction, K: jax.Array, k: int) -> GreedyResult:
+def greedy(
+    fn: SetFunction, K: jax.Array, k: int, *, valid: jax.Array | None = None
+) -> GreedyResult:
     """Exact naive greedy: argmax of the full gain vector each step."""
     n = K.shape[0]
     state0 = fn.init(K)
@@ -53,12 +76,12 @@ def greedy(fn: SetFunction, K: jax.Array, k: int) -> GreedyResult:
             state,
             selected.at[j].set(True),
             idxs.at[t].set(j.astype(jnp.int32)),
-            gs.at[t].set(gains[j].astype(jnp.float32)),
+            gs.at[t].set(jnp.where(selected[j], _NEG, gains[j]).astype(jnp.float32)),
         )
 
     carry = (
         state0,
-        jnp.zeros((n,), bool),
+        _selected0(n, valid),
         jnp.zeros((k,), jnp.int32),
         jnp.zeros((k,), jnp.float32),
     )
@@ -71,19 +94,9 @@ def stochastic_candidate_count(n: int, k: int, eps: float) -> int:
     return max(1, min(n, math.ceil((n / max(k, 1)) * math.log(1.0 / eps))))
 
 
-@functools.partial(jax.jit, static_argnames=("fn", "k", "s"))
-def stochastic_greedy(
-    fn: SetFunction, K: jax.Array, k: int, key: jax.Array, *, s: int
-) -> GreedyResult:
-    """Stochastic greedy (paper Alg. 2 inner loop).
-
-    Per step, a candidate set of size ``s`` is drawn uniformly from the
-    unselected ground set via Gumbel top-k on masked uniform logits, then the
-    best candidate by marginal gain is added.
-    """
+def _stochastic_greedy_body(fn: SetFunction, K: jax.Array, s: int, keys: jax.Array):
+    """Shared per-step body for the single-run and vmapped engines."""
     n = K.shape[0]
-    state0 = fn.init(K)
-    keys = jax.random.split(key, k)
 
     def body(t, carry):
         state, selected, idxs, gs = carry
@@ -91,11 +104,14 @@ def stochastic_greedy(
         g = jax.random.gumbel(keys[t], (n,))
         logits = jnp.where(selected, _NEG, g)
         _, cand = jax.lax.top_k(logits, s)  # (s,) candidate indices
-        gains = fn.gains(state, K)          # vectorized over all n; gather s
+        # Candidate-gather gain evaluation: only the s sampled candidates are
+        # ever compared, so only their gains are computed — O(n·s) per step
+        # (FL) instead of the O(n²) full-vector path.
+        cand_gains = _gains_at(fn, state, K, cand)
         # when s exceeds the unselected pool, top_k pads the candidate set
         # with already-selected elements — mask their gains so they can never
         # win the argmax (would duplicate an index in the subset)
-        cand_gains = jnp.where(selected[cand], _NEG, gains[cand])
+        cand_gains = jnp.where(selected[cand], _NEG, cand_gains)
         best = cand[jnp.argmax(cand_gains)]
         state = fn.update(state, K, best)
         return (
@@ -105,9 +121,32 @@ def stochastic_greedy(
             gs.at[t].set(jnp.max(cand_gains).astype(jnp.float32)),
         )
 
+    return body
+
+
+@functools.partial(jax.jit, static_argnames=("fn", "k", "s"))
+def stochastic_greedy(
+    fn: SetFunction,
+    K: jax.Array,
+    k: int,
+    key: jax.Array,
+    *,
+    s: int,
+    valid: jax.Array | None = None,
+) -> GreedyResult:
+    """Stochastic greedy (paper Alg. 2 inner loop).
+
+    Per step, a candidate set of size ``s`` is drawn uniformly from the
+    unselected ground set via Gumbel top-k on masked uniform logits, then the
+    best candidate by marginal gain (``gains_at`` on the s candidates only)
+    is added.
+    """
+    n = K.shape[0]
+    keys = jax.random.split(key, k)
+    body = _stochastic_greedy_body(fn, K, s, keys)
     carry = (
-        state0,
-        jnp.zeros((n,), bool),
+        fn.init(K),
+        _selected0(n, valid),
         jnp.zeros((k,), jnp.int32),
         jnp.zeros((k,), jnp.float32),
     )
@@ -115,17 +154,29 @@ def stochastic_greedy(
     return GreedyResult(idxs, gs)
 
 
-@functools.partial(jax.jit, static_argnames=("fn",))
-def greedy_importance(fn: SetFunction, K: jax.Array) -> jax.Array:
-    """Paper Alg. 3: full greedy over the whole ground set.
+@functools.partial(jax.jit, static_argnames=("fn", "k", "s", "n_subsets"))
+def _sge_bank(
+    fn: SetFunction,
+    K: jax.Array,
+    k: int,
+    key: jax.Array,
+    *,
+    s: int,
+    n_subsets: int,
+    valid: jax.Array | None = None,
+) -> jax.Array:
+    """All ``n_subsets`` stochastic-greedy runs as ONE XLA program.
 
-    Returns ``g`` with ``g[e]`` = marginal gain of element ``e`` at the moment
-    it was greedily included (its WRE importance score).
+    ``fn.init`` and the Gumbel key split match the sequential path exactly, so
+    trajectories are identical under fixed keys; ``vmap`` shares ``K`` (and
+    the init computation) across runs and batches only the per-run carries.
     """
-    n = K.shape[0]
-    res = greedy(fn, K, n)
-    g = jnp.zeros((n,), jnp.float32)
-    return g.at[res.indices].set(res.gains)
+    keys = jax.random.split(key, n_subsets)
+
+    def one_run(kk: jax.Array) -> jax.Array:
+        return stochastic_greedy(fn, K, k, kk, s=s, valid=valid).indices
+
+    return jax.vmap(one_run)(keys)
 
 
 def sge(
@@ -136,14 +187,44 @@ def sge(
     *,
     n_subsets: int,
     eps: float = 0.01,
+    vmapped: bool = True,
+    valid: jax.Array | None = None,
 ) -> jax.Array:
     """Paper Alg. 2 (SGE): run stochastic greedy ``n_subsets`` times.
 
     Returns an ``(n_subsets, k)`` int32 array of selected indices.  Each run
     is an independent stochastic-greedy maximization; randomness of the
     candidate draws yields distinct near-optimal subsets.
+
+    ``vmapped=True`` (default) executes the whole bank as one jitted XLA
+    program; ``vmapped=False`` keeps the legacy one-dispatch-per-run loop
+    (same trajectories — kept for tests and before/after benchmarks).
     """
     s = stochastic_candidate_count(K.shape[0], k, eps)
+    if vmapped:
+        return _sge_bank(fn, K, k, key, s=s, n_subsets=n_subsets, valid=valid)
     keys = jax.random.split(key, n_subsets)
-    runs = [stochastic_greedy(fn, K, k, kk, s=s).indices for kk in keys]
+    runs = [stochastic_greedy(fn, K, k, kk, s=s, valid=valid).indices for kk in keys]
     return jnp.stack(runs, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("fn",))
+def greedy_importance(
+    fn: SetFunction, K: jax.Array, *, valid: jax.Array | None = None
+) -> jax.Array:
+    """Paper Alg. 3: full greedy over the whole ground set.
+
+    Returns ``g`` with ``g[e]`` = marginal gain of element ``e`` at the moment
+    it was greedily included (its WRE importance score).
+
+    With a ``valid`` mask the run still takes ``n`` (padded) steps; once the
+    valid pool is exhausted the argmax degenerates to an arbitrary re-pick
+    with sentinel gain ``_NEG``, so the scatter below takes a per-element max
+    — any real inclusion gain beats the sentinel, and padded elements (never
+    genuinely included) end up at 0.
+    """
+    n = K.shape[0]
+    res = greedy(fn, K, n, valid=valid)
+    g = jnp.full((n,), _NEG, jnp.float32)
+    g = g.at[res.indices].max(res.gains)
+    return jnp.where(g <= _NEG / 2, 0.0, g)

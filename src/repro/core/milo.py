@@ -27,12 +27,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.greedy import greedy_importance, sge as run_sge
-from repro.core import submodular
+from repro.core import gram_free as gram_free_mod, submodular
 from repro.core.curriculum import CurriculumConfig
 from repro.core.exploration import taylor_softmax, weighted_sample_without_replacement
 from repro.core.metadata import MiloMetadata
 from repro.core.partition import Partition, merge_class_selections, partition_by_class, proportional_budgets
-from repro.core.similarity import gram_matrix_blocked
+from repro.core.similarity import gram_matrix_blocked, normalize_rows
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(0, int(n) - 1).bit_length()
 
 
 def _normalize_probs(p: np.ndarray) -> np.ndarray:
@@ -60,9 +64,30 @@ class MiloPreprocessor:
     classwise: bool = True
     metric: str = "cosine"
     gram_block: int = 2048
-    use_pallas: bool = False        # route Gram tiles through the Pallas kernel
+    use_pallas: bool = False        # route Gram tiles / FL gains through Pallas
+    # Gram-free hot path: set functions contract features directly
+    # (O(n·d + n) per-class memory) instead of materializing the (n², ) Gram.
+    # Cosine metric only — the rescaled-cosine column is an O(n·d) matvec.
+    gram_free: bool = False
+    # Pad every per-class problem (ground-set size AND budget) to the next
+    # power of two with exact masking, so the jitted greedy engines compile
+    # once per bucket instead of once per distinct class size.
+    bucket_classes: bool = True
+    # Run the SGE bank as one vmapped XLA program (False = legacy per-run loop)
+    sge_vmapped: bool = True
 
     def _set_fn(self, name: str) -> submodular.SetFunction:
+        if self.gram_free:
+            if name == "graph_cut":
+                return gram_free_mod.make_gram_free_graph_cut(self.graph_cut_lambda)
+            if name == "facility_location":
+                # compiled kernel on TPU; interpret mode is the CPU
+                # validation path, not a production route
+                return gram_free_mod.make_gram_free_facility_location(
+                    use_pallas=self.use_pallas,
+                    interpret=jax.default_backend() != "tpu",
+                )
+            return gram_free_mod.get_gram_free(name)
         if name == "graph_cut":
             return submodular.make_graph_cut(self.graph_cut_lambda)
         return submodular.get(name)
@@ -80,6 +105,12 @@ class MiloPreprocessor:
         ``key`` from, recorded in the artifact config so reuse checks can
         tell two stochastic-greedy draws apart."""
         features = np.asarray(features)
+        if self.gram_free and self.metric != "cosine":
+            raise ValueError(
+                f"gram_free preprocessing supports metric='cosine' only "
+                f"(got {self.metric!r}); the gram-free set functions rebuild "
+                "rescaled-cosine columns from features on the fly"
+            )
         m = features.shape[0]
         k = max(1, int(round(self.subset_fraction * m)))
         if labels is None or not self.classwise:
@@ -92,6 +123,10 @@ class MiloPreprocessor:
 
         easy = self._set_fn(self.easy_fn)
         hard = self._set_fn(self.hard_fn)
+        # Bucketing exists to deduplicate compiles across many class shapes;
+        # with a single partition there is exactly one shape, so padding
+        # would only inflate the problem (up to 4x Gram memory, 2x steps).
+        bucket = self.bucket_classes and len(parts) > 1
 
         per_class_sge: list[np.ndarray] = []  # each (n_subsets, k_c) local idx
         wre_probs = np.zeros((m,), np.float32)
@@ -99,18 +134,51 @@ class MiloPreprocessor:
 
         for part, k_c in zip(parts, budgets):
             key, k_sge = jax.random.split(key)
-            z = jnp.asarray(features[part.indices])
-            K = gram_matrix_blocked(
-                z, metric=self.metric, block=self.gram_block, use_pallas=self.use_pallas
-            )
             n_c = len(part.indices)
             if k_c <= 0:
                 per_class_sge.append(np.zeros((self.n_sge_subsets, 0), np.int64))
                 imp = np.zeros((n_c,), np.float32)
             else:
-                subs = run_sge(easy, K, k_c, k_sge, n_subsets=self.n_sge_subsets, eps=self.eps)
-                per_class_sge.append(np.asarray(subs, np.int64))
-                imp = np.asarray(greedy_importance(hard, K), np.float32)
+                z = jnp.asarray(features[part.indices])
+                if self.gram_free:
+                    # the "kernel" threaded through the greedy engines is the
+                    # row-normalized feature matrix itself: O(n·d), no Gram
+                    A = normalize_rows(z.astype(jnp.float32))
+                else:
+                    A = gram_matrix_blocked(
+                        z, metric=self.metric, block=self.gram_block,
+                        use_pallas=self.use_pallas,
+                    )
+                valid = None
+                k_run = k_c
+                if bucket:
+                    # Pad the problem (ground set AND budget) to the next
+                    # power of two: the jit cache then keys on O(log²)
+                    # distinct (bucket, k_run) pairs instead of every class
+                    # size.  Masking is exact — padded elements start
+                    # pre-selected and padded rows contribute nothing (zero
+                    # Gram rows / +inf FL cover) — so DETERMINISTIC runs
+                    # (full greedy -> WRE importance) match the unpadded run
+                    # bit-for-bit.  The STOCHASTIC SGE draws use the padded
+                    # candidate geometry (s and the per-step key split come
+                    # from n_pad/k_run), so for a fixed seed the bank differs
+                    # from an unbucketed run — a different but equally valid
+                    # stochastic-greedy sample (see ROADMAP perf follow-ups).
+                    n_pad = _next_pow2(n_c)
+                    k_run = min(n_pad, _next_pow2(k_c))
+                    if n_pad > n_c:
+                        pad = ((0, n_pad - n_c), (0, 0)) if self.gram_free else (
+                            (0, n_pad - n_c), (0, n_pad - n_c))
+                        A = jnp.pad(A, pad)
+                    valid = jnp.arange(n_pad) < n_c
+                subs = run_sge(
+                    easy, A, k_run, k_sge, n_subsets=self.n_sge_subsets,
+                    eps=self.eps, vmapped=self.sge_vmapped, valid=valid,
+                )
+                per_class_sge.append(np.asarray(subs, np.int64)[:, :k_c])
+                imp = np.asarray(
+                    greedy_importance(hard, A, valid=valid), np.float32
+                )[:n_c]
             wre_importance[part.indices] = imp
             # Within-class Taylor-softmax, weighted by class mass so the global
             # vector is a proper distribution with stratified expectation.
@@ -141,6 +209,8 @@ class MiloPreprocessor:
                 graph_cut_lambda=self.graph_cut_lambda,
                 classwise=self.classwise,
                 metric=self.metric,
+                gram_free=self.gram_free,
+                bucket_classes=self.bucket_classes,
                 encoder_id=encoder_id,
                 prep_seed=prep_seed,
             ),

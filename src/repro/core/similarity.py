@@ -33,14 +33,20 @@ def cosine_similarity(zq: jax.Array, zk: jax.Array) -> jax.Array:
     return 0.5 + 0.5 * (zq @ zk.T)
 
 
-def dot_similarity(zq: jax.Array, zk: jax.Array) -> jax.Array:
+def dot_similarity(
+    zq: jax.Array, zk: jax.Array, *, shift: float | jax.Array | None = None
+) -> jax.Array:
     """Dot-product similarity, additively shifted to be non-negative.
 
     The paper performs additive scaling so all pairwise values are >= 0; as a
-    jit-friendly surrogate we shift by the batch minimum.
+    jit-friendly surrogate we shift by the batch minimum.  Blocked callers
+    must pass the *global* minimum as ``shift`` — a per-tile minimum would
+    make the assembled matrix a different function in every block.
     """
     s = zq @ zk.T
-    return s - jnp.minimum(jnp.min(s), 0.0)
+    if shift is None:
+        shift = jnp.min(s)
+    return s - jnp.minimum(shift, 0.0)
 
 
 def rbf_similarity(
@@ -87,6 +93,7 @@ def gram_matrix_blocked(
     *,
     metric: Metric = "cosine",
     block: int = 1024,
+    kw: float = 0.1,
     use_pallas: bool = False,
     interpret: bool = True,
 ) -> jax.Array:
@@ -94,22 +101,53 @@ def gram_matrix_blocked(
 
     ``use_pallas=True`` routes each tile through the Pallas similarity kernel
     (``repro.kernels.similarity``); on CPU this requires ``interpret=True``.
+
+    ``dot``'s non-negativity shift and ``rbf``'s mean-distance bandwidth are
+    data-dependent *global* statistics: they are computed once over all tiles
+    in a first pass and passed into every tile, so the assembled matrix is
+    the same function in every block (and matches ``gram_matrix``).
     """
     m = z.shape[0]
     z32 = normalize_rows(z.astype(jnp.float32)) if metric == "cosine" else z.astype(jnp.float32)
     nblocks = (m + block - 1) // block
-    rows = []
-    for bi in range(nblocks):
-        lo = bi * block
-        hi = min(m, lo + block)
-        zq = z32[lo:hi]
-        if use_pallas and metric == "cosine":
-            from repro.kernels.similarity import ops as sim_ops
+    tiles = [(bi * block, min(m, (bi + 1) * block)) for bi in range(nblocks)]
 
-            rows.append(sim_ops.similarity(zq, z32, normalized=True, interpret=interpret))
-        else:
-            if metric == "cosine":
-                rows.append(0.5 + 0.5 * (zq @ z32.T))
+    if metric == "cosine":
+        rows = []
+        for lo, hi in tiles:
+            if use_pallas:
+                from repro.kernels.similarity import ops as sim_ops
+
+                rows.append(sim_ops.similarity(z32[lo:hi], z32, normalized=True,
+                                               interpret=interpret))
             else:
-                rows.append(gram_matrix(zq, z32, metric=metric))
-    return jnp.concatenate(rows, axis=0)
+                rows.append(0.5 + 0.5 * (z32[lo:hi] @ z32.T))
+        return jnp.concatenate(rows, axis=0)
+
+    # dot/rbf: the shift / bandwidth are GLOBAL data-dependent statistics —
+    # a per-tile statistic would make the assembled matrix a different
+    # function in every block (and disagree with the one-shot gram_matrix).
+    if metric == "dot":
+        # the raw tiles ARE the output modulo the shift, so one sweep suffices
+        raw = [z32[lo:hi] @ z32.T for lo, hi in tiles]
+        shift = jnp.min(jnp.stack([jnp.min(r) for r in raw]))
+        return jnp.concatenate(raw, axis=0) - jnp.minimum(shift, 0.0)
+    if metric == "rbf":
+        # two passes, recomputing each d2 tile in the second: the bandwidth
+        # needs every tile before any output can be produced, and holding
+        # all d2 tiles alongside the exp tiles would triple peak memory —
+        # the one thing a blocked builder exists to bound.
+        sumsq = jnp.sum(z32 * z32, axis=-1)
+
+        def d2_tile(lo: int, hi: int) -> jax.Array:
+            return jnp.maximum(
+                sumsq[lo:hi, None] - 2.0 * (z32[lo:hi] @ z32.T) + sumsq[None, :], 0.0
+            )
+
+        total = sum(jnp.sum(jnp.sqrt(d2_tile(lo, hi) + 1e-12)) for lo, hi in tiles)
+        mean_dist = total / (m * m)
+        return jnp.concatenate(
+            [jnp.exp(-d2_tile(lo, hi) / (kw * mean_dist + 1e-12)) for lo, hi in tiles],
+            axis=0,
+        )
+    raise ValueError(f"unknown metric {metric!r}")

@@ -1,15 +1,23 @@
 """Set functions from the paper (App. D), in incremental-gain form.
 
-Each set function is expressed as a triple of pure functions over a fixed
-similarity matrix ``K`` (shape ``(n, n)``, values in [0, 1]):
+Each set function is expressed as pure functions over a fixed similarity
+matrix ``K`` (shape ``(n, n)``, values in [0, 1]):
 
-    init(K)              -> state                       (pytree of arrays)
-    gains(state, K)      -> (n,) marginal gains f(S u j) - f(S) for every j
-    update(state, K, j)  -> state after adding j to S
+    init(K)                  -> state                   (pytree of arrays)
+    gains(state, K)          -> (n,) marginal gains f(S u j) - f(S) for every j
+    gains_at(state, K, cand) -> (s,) marginal gains for candidate indices only
+    update(state, K, j)      -> state after adding j to S
 
 This formulation turns greedy maximization into a jit-compiled
 ``lax.fori_loop`` with *vectorized* gain evaluation — the TPU-native
 replacement for submodlib's per-element CPU heaps (see DESIGN.md §2).
+
+``gains_at`` is the stochastic-greedy hot path: a step that samples ``s``
+candidates only ever needs those ``s`` gains, so evaluating them directly
+(a column gather for facility location, a state gather for the others) is
+O(n·s) or O(s) instead of the O(n²) full-vector evaluation.  It must satisfy
+``gains_at(state, K, cand) == gains(state, K)[cand]`` elementwise; every
+implementation below does so bit-exactly.
 
 Functions:
   * facility_location  (representation, submodular monotone)
@@ -42,6 +50,17 @@ class SetFunction:
     # Evaluate f(S) from scratch for a boolean mask — used by tests/property
     # checks, not by the greedy loop.
     evaluate: Callable[[jax.Array, jax.Array], jax.Array]
+    # Candidate-gather gains (stochastic-greedy hot path).  None falls back
+    # to gathering from the full gains vector — correct but O(n²) for
+    # facility location, so every shipped set function provides one.
+    gains_at: Callable[[State, jax.Array, jax.Array], jax.Array] | None = None
+
+
+def gains_at(fn: SetFunction, state: State, K: jax.Array, cand: jax.Array) -> jax.Array:
+    """``fn.gains(state, K)[cand]`` without the full evaluation when possible."""
+    if fn.gains_at is not None:
+        return fn.gains_at(state, K, cand)
+    return fn.gains(state, K)[cand]
 
 
 # ---------------------------------------------------------------------------
@@ -56,6 +75,12 @@ def _fl_init(K: jax.Array) -> State:
 
 def _fl_gains(c: State, K: jax.Array) -> jax.Array:
     return jnp.sum(jax.nn.relu(K - c[:, None]), axis=0)
+
+
+def _fl_gains_at(c: State, K: jax.Array, cand: jax.Array) -> jax.Array:
+    # Column gather: O(n·s) work instead of O(n²).  Same reduction over the
+    # same column values as _fl_gains, so the result is bit-exact.
+    return jnp.sum(jax.nn.relu(K[:, cand] - c[:, None]), axis=0)
 
 
 def _fl_update(c: State, K: jax.Array, j: jax.Array) -> State:
@@ -74,6 +99,7 @@ facility_location = SetFunction(
     gains=_fl_gains,
     update=_fl_update,
     evaluate=_fl_eval,
+    gains_at=_fl_gains_at,
 )
 
 
@@ -90,6 +116,10 @@ def make_graph_cut(lam: float = 0.4) -> SetFunction:
     def gains(state: State, K: jax.Array) -> jax.Array:
         return state["colsum"] - lam * (2.0 * state["cur"] + jnp.diagonal(K))
 
+    def gains_at(state: State, K: jax.Array, cand: jax.Array) -> jax.Array:
+        # K[cand, cand] is the pointwise diagonal gather — O(s), not O(n).
+        return state["colsum"][cand] - lam * (2.0 * state["cur"][cand] + K[cand, cand])
+
     def update(state: State, K: jax.Array, j: jax.Array) -> State:
         return {"colsum": state["colsum"], "cur": state["cur"] + K[:, j]}
 
@@ -97,7 +127,7 @@ def make_graph_cut(lam: float = 0.4) -> SetFunction:
         m = mask.astype(K.dtype)
         return jnp.sum(K @ m) - lam * (m @ K @ m)
 
-    return SetFunction("graph_cut", init, gains, update, evaluate)
+    return SetFunction("graph_cut", init, gains, update, evaluate, gains_at=gains_at)
 
 
 graph_cut = make_graph_cut(0.4)
@@ -116,6 +146,10 @@ def _ds_gains(cur: State, K: jax.Array) -> jax.Array:
     return 2.0 * cur
 
 
+def _ds_gains_at(cur: State, K: jax.Array, cand: jax.Array) -> jax.Array:
+    return 2.0 * cur[cand]
+
+
 def _ds_update(cur: State, K: jax.Array, j: jax.Array) -> State:
     return cur + (1.0 - K[:, j])
 
@@ -125,7 +159,9 @@ def _ds_eval(mask: jax.Array, K: jax.Array) -> jax.Array:
     return m @ (1.0 - K) @ m - jnp.sum(m * (1.0 - jnp.diagonal(K)))
 
 
-disparity_sum = SetFunction("disparity_sum", _ds_init, _ds_gains, _ds_update, _ds_eval)
+disparity_sum = SetFunction(
+    "disparity_sum", _ds_init, _ds_gains, _ds_update, _ds_eval, gains_at=_ds_gains_at
+)
 
 
 # ---------------------------------------------------------------------------
@@ -148,6 +184,10 @@ def _dm_gains(state: State, K: jax.Array) -> jax.Array:
     return new_f - state["cur"]
 
 
+def _dm_gains_at(state: State, K: jax.Array, cand: jax.Array) -> jax.Array:
+    return jnp.minimum(state["cur"], state["dmin"][cand]) - state["cur"]
+
+
 def _dm_update(state: State, K: jax.Array, j: jax.Array) -> State:
     dist_j = 1.0 - K[:, j]
     new_cur = jnp.where(state["size"] >= 1, jnp.minimum(state["cur"], state["dmin"][j]), state["cur"])
@@ -162,7 +202,9 @@ def _dm_eval(mask: jax.Array, K: jax.Array) -> jax.Array:
     return jnp.min(jnp.where(pair, d, _DMIN_CAP))
 
 
-disparity_min = SetFunction("disparity_min", _dm_init, _dm_gains, _dm_update, _dm_eval)
+disparity_min = SetFunction(
+    "disparity_min", _dm_init, _dm_gains, _dm_update, _dm_eval, gains_at=_dm_gains_at
+)
 
 
 def make_facility_location_pallas(*, interpret: bool = False,
@@ -180,7 +222,13 @@ def make_facility_location_pallas(*, interpret: bool = False,
         return fl_ops.fl_gains(K, c, block_i=block_i, block_j=block_j,
                                interpret=interpret)
 
-    return SetFunction("facility_location_pallas", _fl_init, gains, _fl_update, _fl_eval)
+    def gains_at(c: State, K: jax.Array, cand: jax.Array) -> jax.Array:
+        # gather the s candidate columns, then run the kernel on (n, s)
+        return fl_ops.fl_gains(K[:, cand], c, block_i=block_i, block_j=block_j,
+                               interpret=interpret)
+
+    return SetFunction("facility_location_pallas", _fl_init, gains, _fl_update,
+                       _fl_eval, gains_at=gains_at)
 
 
 REGISTRY = {

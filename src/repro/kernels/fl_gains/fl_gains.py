@@ -1,6 +1,8 @@
-"""Pallas TPU kernel: facility-location greedy gains (the selection hot loop).
+"""Pallas TPU kernels: facility-location greedy gains (the selection hot loop).
 
-For a candidate block J and running cache c, computes
+Two entry points:
+
+``fl_gains_pallas`` — for a candidate block J and running cache c, computes
 ``g_j = Σ_i relu(K_ij - c_i)`` with the ground-set axis i as the innermost
 (revisited-output) reduction axis, streaming (bi, bj) similarity tiles
 HBM→VMEM.  This is the O(n²)-per-step inner loop of facility-location greedy;
@@ -10,6 +12,17 @@ blocking keeps each step's working set at
 
 well inside VMEM, with MXU-friendly 128-aligned tiles (the relu-sum lowers to
 VPU reductions; the tile shape choice matters for layout, not the MXU).
+
+``fl_gains_gram_free_pallas`` — the gram-free variant: the (bi, bj) similarity
+tile is never read from HBM but fused on the fly on the MXU from row-normalized
+feature tiles, ``K_tile = 0.5 + 0.5 · z_tile @ zc_tileᵀ``.  The (n, n) Gram
+matrix is never materialized anywhere: HBM holds only the (n, d) features and
+the (n,) cover vector, so per-class selection memory drops from O(n²) to
+O(n·d + n) while each grid step keeps a
+
+    4 * (bi*d + bj*d + bi*bj + bi + bj) bytes ≈ 2.6 MB  (bi=bj=512, d=128)
+
+working set in VMEM.
 """
 from __future__ import annotations
 
@@ -66,4 +79,64 @@ def fl_gains_pallas(
         out_shape=jax.ShapeDtypeStruct((1, n_cand), jnp.float32),
         interpret=interpret,
     )(K, c[:, None])
+    return out[0]
+
+
+def _fl_gains_gram_free_kernel(z_ref, zc_ref, c_ref, out_ref):
+    i = pl.program_id(1)  # reduction (ground-set) axis — innermost
+    z_blk = z_ref[...].astype(jnp.float32)    # (bi, d)
+    zc_blk = zc_ref[...].astype(jnp.float32)  # (bj, d)
+    c_blk = c_ref[...].astype(jnp.float32)    # (bi, 1)
+    # Fuse the similarity tile on the MXU — the Gram matrix never exists.
+    sim = 0.5 + 0.5 * jax.lax.dot_general(
+        z_blk, zc_blk,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (bi, bj)
+    part = jnp.sum(jnp.maximum(sim - c_blk, 0.0), axis=0, keepdims=True)  # (1, bj)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = part
+
+    @pl.when(i > 0)
+    def _acc():
+        out_ref[...] += part
+
+
+@functools.partial(jax.jit, static_argnames=("block_i", "block_j", "interpret"))
+def fl_gains_gram_free_pallas(
+    z: jax.Array,
+    zc: jax.Array,
+    c: jax.Array,
+    *,
+    block_i: int = 512,
+    block_j: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Gram-free gains for all candidate rows of ``zc`` given max-cache ``c``.
+
+    Args:
+      z: (n, d) row-normalized ground features; zc: (n_cand, d); c: (n,).
+      n % block_i == 0, n_cand % block_j == 0.
+    """
+    n, d = z.shape
+    n_cand = zc.shape[0]
+    bi = min(block_i, n)
+    bj = min(block_j, n_cand)
+    if n % bi or n_cand % bj:
+        raise ValueError(f"shape ({n},{n_cand}) not divisible by ({bi},{bj})")
+    grid = (n_cand // bj, n // bi)
+    out = pl.pallas_call(
+        _fl_gains_gram_free_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bi, d), lambda j, i: (i, 0)),
+            pl.BlockSpec((bj, d), lambda j, i: (j, 0)),
+            pl.BlockSpec((bi, 1), lambda j, i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bj), lambda j, i: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((1, n_cand), jnp.float32),
+        interpret=interpret,
+    )(z, zc, c[:, None])
     return out[0]

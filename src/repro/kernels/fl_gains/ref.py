@@ -20,3 +20,26 @@ def fl_gains_ref(K: jax.Array, c: jax.Array) -> jax.Array:
     K = K.astype(jnp.float32)
     c = c.astype(jnp.float32)
     return jnp.sum(jax.nn.relu(K - c[:, None]), axis=0)
+
+
+def fl_gains_gram_free_ref(z: jax.Array, zc: jax.Array, c: jax.Array) -> jax.Array:
+    """Gram-free facility-location gains: the similarity column is computed
+    on the fly from row-normalized features instead of read from a
+    materialized (n, n) Gram matrix.
+
+        K_ij = 0.5 + 0.5 * <z_i, zc_j>        (rescaled cosine, paper Eq. 10)
+        gain(j | S) = sum_i relu(K_ij - c_i)
+
+    Args:
+      z:  (n, d) row-normalized ground-set features.
+      zc: (n_cand, d) row-normalized candidate features.
+      c:  (n,) running max-similarity cache for the current selection S.
+
+    Returns:
+      (n_cand,) float32 gains.
+    """
+    z = z.astype(jnp.float32)
+    zc = zc.astype(jnp.float32)
+    c = c.astype(jnp.float32)
+    sim = 0.5 + 0.5 * (z @ zc.T)
+    return jnp.sum(jax.nn.relu(sim - c[:, None]), axis=0)

@@ -180,6 +180,8 @@ class AdaptiveRandomPlanSelector(Selector):
 class MiloFixedConfig:
     features: np.ndarray
     k: int
+    # select over features directly (O(n·d) memory) instead of the (n,n) Gram
+    gram_free: bool = False
 
 
 @register("milo_fixed", MiloFixedConfig, paper="MILO (Fixed)",
@@ -189,7 +191,8 @@ class MiloFixedPlanSelector(Selector):
 
     def __init__(self, cfg: MiloFixedConfig):
         self.cfg = cfg
-        self._inner = legacy.MiloFixedSelector(cfg.features, cfg.k)
+        self._inner = legacy.MiloFixedSelector(cfg.features, cfg.k,
+                                               gram_free=cfg.gram_free)
 
     def plan(self, epoch: int) -> SelectionPlan:
         return uniform_plan(

@@ -75,6 +75,12 @@ class MiloSessionConfig:
     metric: str = "cosine"
     gram_block: int = 2048
     use_pallas: bool = False
+    # preprocessing hot-path knobs (see MiloPreprocessor): gram-free FL/set
+    # functions (O(n·d) per-class memory), power-of-two class-size bucketing
+    # (one compile per bucket), vmapped SGE bank (one XLA program per class)
+    gram_free: bool = False
+    bucket_classes: bool = True
+    sge_vmapped: bool = True
     # curriculum
     total_epochs: int = 40
     kappa: float = 1.0 / 6.0
@@ -105,6 +111,9 @@ class MiloSessionConfig:
             metric=self.metric,
             gram_block=self.gram_block,
             use_pallas=self.use_pallas,
+            gram_free=self.gram_free,
+            bucket_classes=self.bucket_classes,
+            sge_vmapped=self.sge_vmapped,
         )
 
     def resolved_prep_seed(self) -> int:
@@ -268,6 +277,19 @@ class MiloSession:
                 "different data (feature fingerprint mismatch); pass "
                 "force=True to rebuild"
             )
+        # gram_free / bucket_classes change which selection trajectories the
+        # artifact holds, so a recorded value must agree; artifacts from
+        # before these knobs existed record neither and are accepted on the
+        # base config alone (same tolerance as prep_seed below).
+        for knob in ("gram_free", "bucket_classes"):
+            stored_knob = md.config.get(knob)
+            expected_knob = getattr(cfg, knob)
+            if stored_knob is not None and bool(stored_knob) != expected_knob:
+                raise MetadataMismatchError(
+                    f"{cfg.metadata_path}: config mismatch on "
+                    f"{{{knob!r}: ({stored_knob}, {expected_knob})}} "
+                    "(stored, expected)"
+                )
         stored_seed = md.config.get("prep_seed")
         expected_seed = cfg.resolved_prep_seed()
         if stored_seed is not None and stored_seed != expected_seed:

@@ -5,7 +5,7 @@ import numpy as np
 import pytest
 
 from repro.kernels.fl_gains import ops as fl_ops
-from repro.kernels.fl_gains.ref import fl_gains_ref
+from repro.kernels.fl_gains.ref import fl_gains_gram_free_ref, fl_gains_ref
 from repro.kernels.flash_attention import ops as fa_ops
 from repro.kernels.flash_attention.ref import gqa_attention_ref
 from repro.kernels.similarity import ops as sim_ops
@@ -39,6 +39,22 @@ def test_fl_gains_kernel_sweep(n, ncand, dtype):
     ref = fl_gains_ref(K, c)
     np.testing.assert_allclose(out, ref, **_tol(dtype))
     assert np.all(np.asarray(out) >= -1e-3), "gains are nonnegative"
+
+
+@pytest.mark.parametrize("n,ncand,d", [(128, 128, 32), (300, 130, 48), (64, 512, 16)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fl_gains_gram_free_kernel_sweep(n, ncand, d, dtype):
+    """Fused-similarity gains (no materialized Gram) vs the jnp oracle."""
+    z = jnp.asarray(RNG.normal(size=(n, d)), dtype)
+    z = z / jnp.maximum(jnp.linalg.norm(z.astype(jnp.float32), axis=-1,
+                                        keepdims=True), 1e-8).astype(dtype)
+    zc = z[:ncand] if ncand <= n else jnp.concatenate([z] * (ncand // n + 1))[:ncand]
+    c = jnp.asarray(RNG.uniform(size=(n,)), dtype)
+    out = fl_ops.fl_gains_gram_free(z, zc, c, block_i=128, block_j=128,
+                                    interpret=True)
+    ref = fl_gains_gram_free_ref(z, zc, c)
+    np.testing.assert_allclose(out, ref, **_tol(dtype))
+    assert out.dtype == jnp.float32
 
 
 @pytest.mark.parametrize(

@@ -1,0 +1,373 @@
+"""Hot-path contracts for the fused selection engine (ISSUE 2):
+
+  * candidate-gather gains: ``gains_at(state, K, cand) == gains(state, K)[cand]``
+    for all four set functions (and their Pallas / gram-free variants),
+  * vmapped SGE bank == sequential SGE under fixed keys,
+  * gram-free facility location == Gram-materializing facility location
+    (kernel vs ref on padded/odd shapes; greedy trajectories on fixtures),
+  * power-of-two bucketing is exact masking (padded elements never selected,
+    deterministic trajectories bit-equal to the unpadded run, one compile
+    per bucket instead of one per class size),
+  * blocked Gram assembly is the same function in every block for the
+    data-dependent ``dot``/``rbf`` metrics.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    MiloPreprocessor,
+    get_gram_free,
+    gram_matrix,
+    gram_matrix_blocked,
+    greedy,
+    greedy_importance,
+    sge,
+    stochastic_greedy,
+)
+from repro.core.gram_free import make_gram_free_facility_location
+from repro.core.greedy import _sge_bank, stochastic_candidate_count
+from repro.core.similarity import normalize_rows
+from repro.core.submodular import (
+    disparity_min,
+    disparity_sum,
+    facility_location,
+    gains_at,
+    graph_cut,
+    make_facility_location_pallas,
+)
+
+RNG = np.random.default_rng(0)
+
+GRAM_FNS = {
+    "facility_location": facility_location,
+    "graph_cut": graph_cut,
+    "disparity_sum": disparity_sum,
+    "disparity_min": disparity_min,
+}
+
+
+def _fixture(n: int, d: int = 16, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    z = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    return z, gram_matrix(z)
+
+
+# ---------------------------------------------------------------------------
+# candidate-gather gains
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(GRAM_FNS))
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_gains_at_matches_full_gains(name, seed):
+    """The O(n·s) gather path must agree with gains(state)[cand] bit-exactly,
+    at several states along a greedy run and for duplicate candidates."""
+    fn = GRAM_FNS[name]
+    n = 48
+    _, K = _fixture(n, seed=seed)
+    rng = np.random.default_rng(seed)
+    state = fn.init(K)
+    for j in rng.permutation(n)[:6]:
+        cand = jnp.asarray(rng.integers(0, n, size=13))  # duplicates allowed
+        full = np.asarray(fn.gains(state, K))[np.asarray(cand)]
+        fast = np.asarray(gains_at(fn, state, K, cand))
+        np.testing.assert_array_equal(full, fast, err_msg=name)
+        state = fn.update(state, K, jnp.asarray(j))
+
+
+def test_gains_at_fallback_without_implementation():
+    """A SetFunction without gains_at falls back to the full-gains gather."""
+    fn = dataclasses.replace(facility_location, gains_at=None)
+    _, K = _fixture(32)
+    state = fn.init(K)
+    cand = jnp.asarray([3, 7, 7, 0])
+    np.testing.assert_array_equal(
+        np.asarray(gains_at(fn, state, K, cand)),
+        np.asarray(fn.gains(state, K))[np.asarray(cand)],
+    )
+
+
+def test_gains_at_pallas_facility_location():
+    fn = make_facility_location_pallas(interpret=True, block_i=32, block_j=32)
+    _, K = _fixture(64)
+    state = fn.init(K)
+    state = fn.update(state, K, jnp.asarray(5))
+    cand = jnp.asarray([1, 9, 33, 63])
+    np.testing.assert_allclose(
+        np.asarray(gains_at(fn, state, K, cand)),
+        np.asarray(facility_location.gains(state, K))[np.asarray(cand)],
+        rtol=1e-5, atol=1e-5,
+    )
+
+
+@pytest.mark.parametrize("name", sorted(GRAM_FNS))
+def test_gains_at_gram_free(name):
+    fn = get_gram_free(name)
+    z, _ = _fixture(40)
+    zn = normalize_rows(z)
+    state = fn.init(zn)
+    rng = np.random.default_rng(3)
+    for j in [2, 11, 29]:
+        cand = jnp.asarray(rng.integers(0, 40, size=9))
+        np.testing.assert_allclose(
+            np.asarray(gains_at(fn, state, zn, cand)),
+            np.asarray(fn.gains(state, zn))[np.asarray(cand)],
+            rtol=1e-6, atol=1e-6, err_msg=name,
+        )
+        state = fn.update(state, zn, jnp.asarray(j))
+
+
+def test_stochastic_greedy_gather_matches_legacy_full_path():
+    """Candidate-gather stochastic greedy follows the identical trajectory as
+    the legacy full-gains evaluation under the same key."""
+    _, K = _fixture(120, seed=4)
+    k = 15
+    s = stochastic_candidate_count(120, k, 0.01)
+    legacy_fn = dataclasses.replace(facility_location, gains_at=None)
+    key = jax.random.PRNGKey(11)
+    a = stochastic_greedy(facility_location, K, k, key, s=s)
+    b = stochastic_greedy(legacy_fn, K, k, key, s=s)
+    np.testing.assert_array_equal(np.asarray(a.indices), np.asarray(b.indices))
+    np.testing.assert_array_equal(np.asarray(a.gains), np.asarray(b.gains))
+
+
+# ---------------------------------------------------------------------------
+# vmapped SGE bank
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["facility_location", "graph_cut"])
+def test_sge_vmapped_equals_sequential(name):
+    fn = GRAM_FNS[name]
+    _, K = _fixture(90, seed=5)
+    key = jax.random.PRNGKey(3)
+    a = np.asarray(sge(fn, K, 12, key, n_subsets=5, vmapped=True))
+    b = np.asarray(sge(fn, K, 12, key, n_subsets=5, vmapped=False))
+    np.testing.assert_array_equal(a, b)
+    assert a.shape == (5, 12)
+    # distinct near-optimal subsets, no duplicate indices within a run
+    for run in a:
+        assert len(set(run.tolist())) == 12
+    assert len({tuple(r.tolist()) for r in a}) > 1
+
+
+def test_sge_vmapped_is_one_compilation_per_shape():
+    _, K = _fixture(64, seed=6)
+    before = _sge_bank._cache_size()
+    for seed in range(3):
+        sge(facility_location, K, 8, jax.random.PRNGKey(seed), n_subsets=4)
+    assert _sge_bank._cache_size() - before == 1
+
+
+# ---------------------------------------------------------------------------
+# gram-free facility location
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,ncand,d", [(128, 128, 16), (700, 321, 48),
+                                       (65, 1000, 24), (1, 1, 8), (300, 1, 7)])
+def test_gram_free_kernel_vs_ref_odd_shapes(n, ncand, d):
+    """Pallas gram-free gains == pure-jnp oracle on padded/odd shapes
+    (n not a multiple of the block, singleton ground sets/candidates)."""
+    from repro.kernels.fl_gains import ops as fl_ops
+    from repro.kernels.fl_gains.ref import fl_gains_gram_free_ref
+
+    rng = np.random.default_rng(n + ncand)
+    z = normalize_rows(jnp.asarray(rng.normal(size=(n, d)).astype(np.float32)))
+    zc = normalize_rows(jnp.asarray(rng.normal(size=(ncand, d)).astype(np.float32)))
+    c = jnp.asarray(rng.uniform(size=(n,)).astype(np.float32))
+    out = fl_ops.fl_gains_gram_free(z, zc, c, block_i=256, block_j=256,
+                                    interpret=True)
+    ref = fl_gains_gram_free_ref(z, zc, c)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-4)
+    assert np.all(np.asarray(out) >= -1e-3)
+
+
+@pytest.mark.parametrize("name", sorted(GRAM_FNS))
+def test_gram_free_greedy_trajectory_matches_gram(name):
+    """Acceptance: the gram-free path selects trajectories identical to the
+    Gram-materializing path on test fixtures — with O(n·d + n) state instead
+    of the (n, n) kernel."""
+    z, K = _fixture(160, d=24, seed=7)
+    zn = normalize_rows(z)
+    a = np.asarray(greedy(GRAM_FNS[name], K, 16).indices)
+    b = np.asarray(greedy(get_gram_free(name), zn, 16).indices)
+    np.testing.assert_array_equal(a, b, err_msg=name)
+
+
+def test_gram_free_pallas_fl_greedy_trajectory():
+    z, K = _fixture(96, seed=8)
+    zn = normalize_rows(z)
+    fn = make_gram_free_facility_location(use_pallas=True, interpret=True,
+                                          block_i=32, block_j=32)
+    a = np.asarray(greedy(facility_location, K, 8).indices)
+    b = np.asarray(greedy(fn, zn, 8).indices)
+    np.testing.assert_array_equal(a, b)
+
+
+def test_gram_free_sge_matches_gram_sge():
+    """SGE with the MILO default easy function (graph-cut), fixed key."""
+    z, K = _fixture(150, seed=9)
+    zn = normalize_rows(z)
+    key = jax.random.PRNGKey(21)
+    a = np.asarray(sge(graph_cut, K, 15, key, n_subsets=4))
+    b = np.asarray(sge(get_gram_free("graph_cut"), zn, 15, key, n_subsets=4))
+    np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# power-of-two bucketing / exact masking
+# ---------------------------------------------------------------------------
+
+def _pad_problem(K: jnp.ndarray, n_pad: int):
+    n = K.shape[0]
+    Kp = jnp.zeros((n_pad, n_pad), K.dtype).at[:n, :n].set(K)
+    return Kp, jnp.arange(n_pad) < n
+
+
+@pytest.mark.parametrize("name", sorted(GRAM_FNS))
+def test_valid_mask_greedy_is_exact(name):
+    """Zero-padding + valid mask reproduces the unpadded greedy trajectory
+    and never selects a padded element.  (Gains agree to reduction-order
+    rounding: the padded rows contribute exact zeros, but XLA may regroup
+    the longer sum.)"""
+    fn = GRAM_FNS[name]
+    _, K = _fixture(75, seed=10)   # 75 -> bucket 128
+    Kp, valid = _pad_problem(K, 128)
+    r = greedy(fn, K, 12)
+    rp = greedy(fn, Kp, 12, valid=valid)
+    np.testing.assert_array_equal(np.asarray(r.indices), np.asarray(rp.indices))
+    np.testing.assert_allclose(np.asarray(r.gains), np.asarray(rp.gains),
+                               rtol=1e-5, atol=1e-6)
+    assert np.asarray(rp.indices).max() < 75
+
+
+@pytest.mark.parametrize("name", ["disparity_min", "facility_location"])
+def test_valid_mask_importance_is_exact(name):
+    fn = GRAM_FNS[name]
+    _, K = _fixture(51, seed=11)
+    Kp, valid = _pad_problem(K, 64)
+    g = np.asarray(greedy_importance(fn, K))
+    gp = np.asarray(greedy_importance(fn, Kp, valid=valid))[:51]
+    np.testing.assert_allclose(g, gp, rtol=1e-5, atol=1e-6)
+
+
+def test_valid_mask_sge_never_selects_padding():
+    _, K = _fixture(70, seed=12)
+    Kp, valid = _pad_problem(K, 128)
+    subs = np.asarray(sge(graph_cut, Kp, 9, jax.random.PRNGKey(5),
+                          n_subsets=6, valid=valid))
+    assert subs.max() < 70
+    for run in subs:
+        assert len(set(run.tolist())) == 9
+
+
+def test_bucketed_preprocessor_compiles_once_per_bucket():
+    """8 distinct class sizes in the same pow2 bucket must not trigger 8
+    recompiles of the SGE bank."""
+    sizes = [33, 35, 37, 41, 45, 51, 57, 61]  # all bucket to 64
+    labels = np.concatenate([np.full(s, i) for i, s in enumerate(sizes)])
+    rng = np.random.default_rng(13)
+    feats = rng.normal(size=(len(labels), 8)).astype(np.float32)
+    before = _sge_bank._cache_size()
+    md = MiloPreprocessor(subset_fraction=0.1, n_sge_subsets=3).preprocess(
+        feats, labels, jax.random.PRNGKey(2)
+    )
+    added = _sge_bank._cache_size() - before
+    assert added <= 3, f"{added} compiles for 8 same-bucket class sizes"
+    # budgets respected and every selection in range
+    assert md.class_budgets.sum() == md.k
+    for s in md.sge_subsets:
+        assert len(set(s.tolist())) == md.k
+
+
+def test_bucketed_importance_matches_unbucketed_preprocess():
+    rng = np.random.default_rng(14)
+    feats = rng.normal(size=(300, 12)).astype(np.float32)
+    labels = rng.integers(0, 4, size=300)
+    md_b = MiloPreprocessor(subset_fraction=0.1, bucket_classes=True).preprocess(
+        feats, labels, jax.random.PRNGKey(0))
+    md_u = MiloPreprocessor(subset_fraction=0.1, bucket_classes=False).preprocess(
+        feats, labels, jax.random.PRNGKey(0))
+    np.testing.assert_array_equal(md_b.wre_importance, md_u.wre_importance)
+    np.testing.assert_allclose(md_b.wre_probs, md_u.wre_probs, rtol=1e-6)
+
+
+def test_preprocessor_gram_free_matches_gram_path():
+    rng = np.random.default_rng(15)
+    feats = rng.normal(size=(240, 16)).astype(np.float32)
+    labels = rng.integers(0, 3, size=240)
+    md_g = MiloPreprocessor(subset_fraction=0.1).preprocess(
+        feats, labels, jax.random.PRNGKey(1))
+    md_f = MiloPreprocessor(subset_fraction=0.1, gram_free=True).preprocess(
+        feats, labels, jax.random.PRNGKey(1))
+    np.testing.assert_array_equal(md_g.sge_subsets, md_f.sge_subsets)
+    np.testing.assert_allclose(md_g.wre_importance, md_f.wre_importance,
+                               rtol=2e-3, atol=2e-3)
+    assert md_f.config["gram_free"] is True
+
+
+def test_preprocessor_gram_free_rejects_non_cosine():
+    with pytest.raises(ValueError, match="cosine"):
+        MiloPreprocessor(gram_free=True, metric="rbf").preprocess(
+            np.ones((10, 4), np.float32), np.zeros(10, np.int64),
+            jax.random.PRNGKey(0))
+
+
+def test_single_partition_skips_bucketing():
+    """With one partition there is exactly one problem shape, so bucketing
+    would only inflate memory/steps — the draw must match bucket_classes=False
+    exactly (which is also the pre-bucketing behavior for a fixed seed)."""
+    rng = np.random.default_rng(19)
+    feats = rng.normal(size=(333, 8)).astype(np.float32)  # not a pow2
+    a = MiloPreprocessor(subset_fraction=0.1, classwise=False,
+                         n_sge_subsets=2).preprocess(
+        feats, None, jax.random.PRNGKey(0))
+    b = MiloPreprocessor(subset_fraction=0.1, classwise=False, n_sge_subsets=2,
+                         bucket_classes=False).preprocess(
+        feats, None, jax.random.PRNGKey(0))
+    np.testing.assert_array_equal(a.sge_subsets, b.sge_subsets)
+    np.testing.assert_array_equal(a.wre_importance, b.wre_importance)
+
+
+def test_preprocessor_singleton_class():
+    """A class with a single member (bucket size 1) must survive bucketing
+    and the gram-free route."""
+    rng = np.random.default_rng(16)
+    feats = rng.normal(size=(41, 8)).astype(np.float32)
+    labels = np.concatenate([np.zeros(40, np.int64), np.ones(1, np.int64)])
+    for gram_free in (False, True):
+        md = MiloPreprocessor(subset_fraction=0.2, gram_free=gram_free).preprocess(
+            feats, labels, jax.random.PRNGKey(3))
+        for s in md.sge_subsets:
+            assert len(set(s.tolist())) == md.k
+            assert s.max() < 41
+        assert np.isfinite(md.wre_probs).all()
+
+
+# ---------------------------------------------------------------------------
+# blocked Gram metric consistency (satellite fix)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("metric", ["cosine", "dot", "rbf"])
+def test_gram_matrix_blocked_matches_unblocked(metric):
+    """Each tile must use the GLOBAL shift (dot) / bandwidth (rbf), so the
+    blocked assembly equals the one-shot Gram matrix."""
+    rng = np.random.default_rng(17)
+    z = jnp.asarray(rng.normal(size=(130, 10)).astype(np.float32))
+    full = np.asarray(gram_matrix(z, metric=metric))
+    blocked = np.asarray(gram_matrix_blocked(z, metric=metric, block=32))
+    np.testing.assert_allclose(blocked, full, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("metric", ["dot", "rbf"])
+def test_gram_matrix_blocked_block_invariant(metric):
+    """The assembled matrix must be the same function regardless of block
+    size (the pre-fix per-tile statistics violated this)."""
+    rng = np.random.default_rng(18)
+    z = jnp.asarray(rng.normal(size=(97, 6)).astype(np.float32))
+    a = np.asarray(gram_matrix_blocked(z, metric=metric, block=16))
+    b = np.asarray(gram_matrix_blocked(z, metric=metric, block=64))
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
