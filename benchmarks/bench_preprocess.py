@@ -27,7 +27,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import csv_row
-from repro.core import MiloPreprocessor, gram_matrix, greedy, sge, stochastic_greedy
+from repro.core import (
+    MiloPreprocessor,
+    get_gram_free,
+    gram_matrix,
+    greedy,
+    greedy_importance,
+    lazy_greedy,
+    sge,
+    stochastic_greedy,
+)
 from repro.core.gram_free import make_gram_free_facility_location
 from repro.core.greedy import stochastic_candidate_count
 from repro.core.similarity import normalize_rows
@@ -114,6 +123,110 @@ def _bench_sge_bank(rows: list[str], verbose: bool, fast: bool) -> None:
             print(rows[-1])
 
 
+def _bench_lazy_importance(rows: list[str], verbose: bool, fast: bool) -> None:
+    """Lazy gain reuse on the WRE full-greedy FL pass (ISSUE 3 tentpole).
+
+    The eager engine contracts all n ground rows for every one of its n
+    steps; the lazy engine's traced counter records what it actually
+    contracted (budget rows on a lazy step, n on a fallback recompute), so
+    ``eval_reduction`` is exact even at sizes where the eager pass is not
+    worth running (n=8192 would be ~35 PFLOP-equivalent of row evals).
+    """
+    d = 32
+    cases = ((512, 64, True),) if fast else (
+        (1024, 128, True),      # eager A/B at a tractable size
+        (8192, 256, False),     # acceptance row: counter-only reduction
+    )
+    for n, budget, run_eager in cases:
+        zn = normalize_rows(_features(n, d=d))
+        fn = make_gram_free_facility_location()
+        res = None
+
+        def one():
+            nonlocal res
+            res = lazy_greedy(fn, zn, n, budget=budget)
+            jax.block_until_ready(res.rows_evaluated)
+
+        t_lazy = _timeit(one, reps=1)
+        rows_eval = np.asarray(res.rows_evaluated)
+        eager_evals = n * n
+        lazy_evals = n + int(rows_eval.sum())  # + init full evaluation
+        reduction = eager_evals / lazy_evals
+        full_steps = int((rows_eval == n).sum())
+        meta = (f"budget={budget} eval_reduction={reduction:.1f}x "
+                f"full_recomputes={full_steps}/{n}")
+        if run_eager:
+            t_eager = _timeit(
+                lambda: greedy(fn, zn, n).gains.block_until_ready(), reps=1
+            )
+            rows.append(csv_row(f"preprocess/importance_fl_eager_n{n}",
+                                t_eager * 1e6, f"d={d}"))
+            if verbose:
+                print(rows[-1])
+            meta += f" speedup_vs_eager={t_eager / max(t_lazy, 1e-9):.1f}x"
+        rows.append(csv_row(f"preprocess/importance_fl_lazy_n{n}",
+                            t_lazy * 1e6, meta))
+        if verbose:
+            print(rows[-1])
+
+
+def _bench_sharded(rows: list[str], verbose: bool, fast: bool) -> None:
+    """Row-sharded selection vs the single-device path (only meaningful on a
+    multi-device platform; on CPU force one with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``).  Forced host
+    "devices" share the physical cores, so the value measured here is the
+    memory split (n/ndev feature rows per device) and trajectory equality,
+    not wall-clock speedup."""
+    if jax.device_count() < 2:
+        return
+    from repro.core import make_sharded_gram_free, sharded_greedy_importance, sharded_sge
+    from repro.distributed.sharding import selection_mesh
+
+    mesh = selection_mesh()
+    ndev = jax.device_count()
+    n = 512 if fast else 4096
+    n -= n % ndev
+    k = max(1, n // 20)
+    zn = normalize_rows(_features(n))
+    fn1 = make_gram_free_facility_location()
+    fns = make_sharded_gram_free("facility_location", n_shards=ndev)
+    key = jax.random.PRNGKey(0)
+
+    bank1 = bank8 = None
+
+    def run_single():
+        nonlocal bank1
+        bank1 = jax.block_until_ready(sge(fn1, zn, k, key, n_subsets=2))
+
+    def run_sharded():
+        nonlocal bank8
+        bank8 = jax.block_until_ready(
+            sharded_sge(fns, zn, k, key, n_subsets=2, mesh=mesh))
+
+    t1 = _timeit(run_single, reps=1)
+    t8 = _timeit(run_sharded, reps=1)
+    same = bool(np.array_equal(np.asarray(bank1), np.asarray(bank8)))
+    rows.append(csv_row(
+        f"preprocess/sge_sharded_n{n}_dev{ndev}", t8 * 1e6,
+        f"k={k} single_device_us={t1 * 1e6:.0f} trajectories_equal={same} "
+        f"rows_per_device={n // ndev}"))
+    if verbose:
+        print(rows[-1])
+
+    if fast:
+        fnd1 = get_gram_free("disparity_min")
+        fnd8 = make_sharded_gram_free("disparity_min", n_shards=ndev)
+        t1 = _timeit(lambda: greedy_importance(fnd1, zn).block_until_ready(),
+                     reps=1)
+        t8 = _timeit(lambda: sharded_greedy_importance(
+            fnd8, zn, mesh=mesh).block_until_ready(), reps=1)
+        rows.append(csv_row(
+            f"preprocess/importance_sharded_n{n}_dev{ndev}", t8 * 1e6,
+            f"single_device_us={t1 * 1e6:.0f} rows_per_device={n // ndev}"))
+        if verbose:
+            print(rows[-1])
+
+
 def run(verbose: bool = True) -> list[str]:
     fast = os.environ.get("BENCH_FAST") == "1"
     rows = []
@@ -153,6 +266,8 @@ def run(verbose: bool = True) -> list[str]:
     del K
 
     _bench_sge_bank(rows, verbose, fast)
+    _bench_lazy_importance(rows, verbose, fast)
+    _bench_sharded(rows, verbose, fast)
 
     # Pallas gram-free FL kernel smoke (interpret mode off-TPU): exercises the
     # fused-similarity kernel on every benchmark run, including CI

@@ -50,8 +50,15 @@ def write_json(rows: list[str], path: str) -> None:
         import jax
 
         backend = jax.default_backend()
+        device_count = jax.device_count()
     except Exception:  # benchmarks ran, so this is near-impossible; be safe
         backend = "unknown"
+        device_count = 0
+    if device_count > 1:
+        # only rows emitted by the sharded benches get the axis stamp below
+        from repro.core.sharded import AXIS as shard_axis
+    else:
+        shard_axis = None
     fast = os.environ.get("BENCH_FAST") == "1"
     doc: dict = {"format": "bench-selection", "version": 1, "benchmarks": {}}
     if os.path.exists(path):
@@ -70,6 +77,9 @@ def write_json(rows: list[str], path: str) -> None:
         name, rec = parsed
         rec["measured_at"] = stamp
         rec["backend"] = backend
+        rec["device_count"] = device_count
+        if shard_axis is not None and "sharded" in name:
+            rec["shard_axis"] = shard_axis
         if fast:
             rec["bench_fast"] = True
         doc["benchmarks"][name] = rec

@@ -157,18 +157,37 @@ class MiloFixedSelector:
     ``gram_free=True`` runs the selection directly over row-normalized
     features (O(n·d) memory) instead of materializing the (n, n) Gram —
     identical trajectories, see ``repro.core.gram_free``.
+
+    ``shard_selection=True`` additionally shards the feature rows across all
+    local devices (``repro.core.sharded``; implies the gram-free route) —
+    still trajectory-identical, falling back to the local path when n does
+    not divide the device count or only one device exists.
     """
 
     features: np.ndarray
     k: int
     gram_free: bool = False
+    shard_selection: bool = False
 
     def __post_init__(self):
-        if self.gram_free:
+        if self.gram_free or self.shard_selection:
             from repro.core.gram_free import make_gram_free_disparity_min
             from repro.core.similarity import normalize_rows
 
             z = normalize_rows(jnp.asarray(self.features, jnp.float32))
+            if self.shard_selection:
+                from repro.core import sharded as sharded_mod
+                from repro.distributed.sharding import selection_mesh
+
+                mesh = selection_mesh(axis=sharded_mod.AXIS)
+                ndev = mesh.shape[sharded_mod.AXIS]
+                if ndev > 1 and z.shape[0] % ndev == 0:
+                    fn = sharded_mod.make_sharded_gram_free(
+                        "disparity_min", n_shards=ndev
+                    )
+                    res = sharded_mod.sharded_greedy(fn, z, self.k, mesh=mesh)
+                    self._idx = np.asarray(res.indices, np.int64)
+                    return
             fn = make_gram_free_disparity_min()
             self._idx = np.asarray(greedy(fn, z, self.k).indices, np.int64)
             return

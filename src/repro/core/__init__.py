@@ -14,7 +14,22 @@ from repro.core.gram_free import (
     make_gram_free_facility_location,
     make_gram_free_graph_cut,
 )
-from repro.core.greedy import GreedyResult, greedy, greedy_importance, sge, stochastic_greedy
+from repro.core.greedy import (
+    GreedyResult,
+    LazyGreedyResult,
+    greedy,
+    greedy_importance,
+    lazy_greedy,
+    sge,
+    stochastic_greedy,
+)
+from repro.core.sharded import (
+    make_sharded_gram_free,
+    sharded_greedy,
+    sharded_greedy_importance,
+    sharded_sge,
+    sharded_stochastic_greedy,
+)
 from repro.core.metadata import MiloMetadata, is_preprocessed
 from repro.core.milo import MiloPreprocessor, MiloSelector, preprocess_with_encoder
 from repro.core.similarity import gram_matrix, gram_matrix_blocked
@@ -47,6 +62,13 @@ __all__ = [
     "greedy",
     "greedy_importance",
     "is_preprocessed",
+    "LazyGreedyResult",
+    "lazy_greedy",
+    "make_sharded_gram_free",
+    "sharded_greedy",
+    "sharded_greedy_importance",
+    "sharded_sge",
+    "sharded_stochastic_greedy",
     "make_gram_free_disparity_min",
     "make_gram_free_disparity_sum",
     "make_gram_free_facility_location",

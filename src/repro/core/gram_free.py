@@ -36,7 +36,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.submodular import SetFunction, State, _DMIN_CAP
+from repro.core.submodular import LazyHooks, SetFunction, State, _DMIN_CAP
 
 
 def _sim_col(z: jax.Array, j: jax.Array) -> jax.Array:
@@ -103,8 +103,16 @@ def make_gram_free_facility_location(
         best = jnp.max(sel, axis=1)
         return jnp.sum(jnp.where(jnp.any(mask), best, 0.0))
 
+    def delta_gains(z: jax.Array, rows: jax.Array, c_old: jax.Array,
+                    c_new: jax.Array) -> jax.Array:
+        return fl_ops.fl_gains_gram_free_delta(
+            z[rows], z, c_old, c_new, block_i=block_i, block_j=block_j,
+            use_pallas=use_pallas, interpret=interpret,
+        )
+
     name = "gram_free_facility_location" + ("_pallas" if use_pallas else "")
-    return SetFunction(name, init, gains, update, evaluate, gains_at=gains_at)
+    return SetFunction(name, init, gains, update, evaluate, gains_at=gains_at,
+                       lazy=LazyHooks(cover=lambda c: c, delta_gains=delta_gains))
 
 
 # ---------------------------------------------------------------------------

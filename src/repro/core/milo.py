@@ -26,7 +26,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.greedy import greedy_importance, sge as run_sge
+from repro.core.greedy import (
+    greedy_importance,
+    sge as run_sge,
+    stochastic_candidate_count,
+)
 from repro.core import gram_free as gram_free_mod, submodular
 from repro.core.curriculum import CurriculumConfig
 from repro.core.exploration import taylor_softmax, weighted_sample_without_replacement
@@ -75,6 +79,40 @@ class MiloPreprocessor:
     bucket_classes: bool = True
     # Run the SGE bank as one vmapped XLA program (False = legacy per-run loop)
     sge_vmapped: bool = True
+    # Shard the ground-set row axis of z across all local devices
+    # (core.sharded): per-device memory drops to O(n·d / ndev + n) so one
+    # class can exceed a single device.  Requires gram_free; classes whose
+    # (padded) size does not divide the device count run the single-device
+    # path — either way trajectories are identical to shard_selection=False.
+    shard_selection: bool = False
+    # Lazy gain reuse for the WRE full-greedy pass (facility-location hard
+    # functions only): cache the gain vector and correct it over just the
+    # rows whose cover the last pick moved, with a full recompute once the
+    # touched fraction exceeds lazy_threshold.  Near-ties below float32
+    # rounding can resolve differently from the eager pass (see
+    # greedy.lazy_greedy); importance is an equally valid greedy order.
+    lazy_gains: bool = False
+    lazy_threshold: float = 0.125
+    # Bucketed SGE draws its per-step candidate count s from the PADDED
+    # problem geometry by default (one compile per bucket, documented
+    # approximation).  True derives s from the class's true (n_c, k_c) —
+    # the unpadded draw size — at no extra compile cost.
+    exact_sge_candidates: bool = False
+
+    def _sharded_set_fn(self, name: str, mesh) -> submodular.SetFunction:
+        from repro.core import sharded as sharded_mod
+
+        kwargs = {}
+        if name == "graph_cut":
+            kwargs["lam"] = self.graph_cut_lambda
+        if name == "facility_location":
+            kwargs.update(
+                use_pallas=self.use_pallas,
+                interpret=jax.default_backend() != "tpu",
+            )
+        return sharded_mod.make_sharded_gram_free(
+            name, n_shards=mesh.shape[sharded_mod.AXIS], **kwargs
+        )
 
     def _set_fn(self, name: str) -> submodular.SetFunction:
         if self.gram_free:
@@ -127,6 +165,22 @@ class MiloPreprocessor:
         # with a single partition there is exactly one shape, so padding
         # would only inflate the problem (up to 4x Gram memory, 2x steps).
         bucket = self.bucket_classes and len(parts) > 1
+        mesh = easy_sh = hard_sh = None
+        if self.shard_selection:
+            if not self.gram_free:
+                raise ValueError(
+                    "shard_selection=True requires gram_free=True: only the "
+                    "feature-matrix row axis is shardable (a materialized "
+                    "Gram couples both axes)"
+                )
+            from repro.core import sharded as sharded_mod
+            from repro.distributed.sharding import selection_mesh
+
+            sel_mesh = selection_mesh(axis=sharded_mod.AXIS)
+            if sel_mesh.shape[sharded_mod.AXIS] > 1:
+                mesh = sel_mesh
+                easy_sh = self._sharded_set_fn(self.easy_fn, mesh)
+                hard_sh = self._sharded_set_fn(self.hard_fn, mesh)
 
         per_class_sge: list[np.ndarray] = []  # each (n_subsets, k_c) local idx
         wre_probs = np.zeros((m,), np.float32)
@@ -151,6 +205,7 @@ class MiloPreprocessor:
                     )
                 valid = None
                 k_run = k_c
+                n_run = n_c
                 if bucket:
                     # Pad the problem (ground set AND budget) to the next
                     # power of two: the jit cache then keys on O(log²)
@@ -171,14 +226,44 @@ class MiloPreprocessor:
                             (0, n_pad - n_c), (0, n_pad - n_c))
                         A = jnp.pad(A, pad)
                     valid = jnp.arange(n_pad) < n_c
-                subs = run_sge(
-                    easy, A, k_run, k_sge, n_subsets=self.n_sge_subsets,
-                    eps=self.eps, vmapped=self.sge_vmapped, valid=valid,
+                    n_run = n_pad
+                # exact_sge_candidates: derive the stochastic-greedy draw
+                # size from the class's true geometry instead of the padded
+                # bucket's (identical when unbucketed)
+                s_sge = (
+                    stochastic_candidate_count(n_c, k_c, self.eps)
+                    if self.exact_sge_candidates else None
                 )
+                # The sharded path needs the (padded) row count to divide the
+                # mesh; pow2 buckets always do on a pow2 mesh, tiny/odd
+                # classes fall back to the trajectory-identical local path.
+                shard_ok = mesh is not None and n_run % mesh.size == 0
+                if shard_ok:
+                    subs = sharded_mod.sharded_sge(
+                        easy_sh, A, k_run, k_sge, n_subsets=self.n_sge_subsets,
+                        eps=self.eps, s=s_sge, mesh=mesh, valid=valid,
+                    )
+                else:
+                    subs = run_sge(
+                        easy, A, k_run, k_sge, n_subsets=self.n_sge_subsets,
+                        eps=self.eps, vmapped=self.sge_vmapped, valid=valid,
+                        s=s_sge,
+                    )
                 per_class_sge.append(np.asarray(subs, np.int64)[:, :k_c])
-                imp = np.asarray(
-                    greedy_importance(hard, A, valid=valid), np.float32
-                )[:n_c]
+                if shard_ok:
+                    imp_full = sharded_mod.sharded_greedy_importance(
+                        hard_sh, A, mesh=mesh, valid=valid,
+                    )
+                else:
+                    lazy_budget = None
+                    if self.lazy_gains and hard.lazy is not None:
+                        lazy_budget = max(1, int(n_run * self.lazy_threshold))
+                        if lazy_budget >= n_run:
+                            lazy_budget = None  # nothing to save
+                    imp_full = greedy_importance(
+                        hard, A, valid=valid, lazy_budget=lazy_budget,
+                    )
+                imp = np.asarray(imp_full, np.float32)[:n_c]
             wre_importance[part.indices] = imp
             # Within-class Taylor-softmax, weighted by class mass so the global
             # vector is a proper distribution with stratified expectation.
@@ -211,6 +296,13 @@ class MiloPreprocessor:
                 metric=self.metric,
                 gram_free=self.gram_free,
                 bucket_classes=self.bucket_classes,
+                # trajectory-affecting engine knobs (checked on artifact
+                # reuse); shard_selection is recorded for provenance only —
+                # sharded and single-device runs select identically
+                lazy_gains=self.lazy_gains,
+                lazy_threshold=self.lazy_threshold,
+                exact_sge_candidates=self.exact_sge_candidates,
+                shard_selection=self.shard_selection,
                 encoder_id=encoder_id,
                 prep_seed=prep_seed,
             ),

@@ -28,7 +28,7 @@ Functions:
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -37,6 +37,26 @@ State = Any
 
 # Large-but-finite stand-in for +inf so disparity-min stays NaN-free.
 _DMIN_CAP = 2.0
+
+
+class LazyHooks(NamedTuple):
+    """Capabilities the lazy-gain greedy engine needs (``greedy.lazy_greedy``).
+
+    A set function whose full gain evaluation reduces over the ground-set
+    axis (facility location) can expose these to let the engine *cache* the
+    gain vector and correct it incrementally: after adding ``j``, only rows
+    whose cover moved (``K_ij > c_i``) change any element's gain.
+
+    ``cover(state) -> (n,)``: the running per-row cover vector ``c``.
+    ``delta_gains(K, rows, c_old_rows, c_new_rows) -> (n,)``: the gain
+    correction summed over just ``rows`` — for each candidate ``e``,
+    ``sum_i relu(K_ie - c_new_i) - relu(K_ie - c_old_i)`` over the given
+    rows.  Rows with an infinite cover in BOTH vectors contribute exact
+    zeros, which is how the engine neutralizes budget-padding slots.
+    """
+
+    cover: Callable[[State], jax.Array]
+    delta_gains: Callable[[jax.Array, jax.Array, jax.Array, jax.Array], jax.Array]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -54,6 +74,10 @@ class SetFunction:
     # to gathering from the full gains vector — correct but O(n²) for
     # facility location, so every shipped set function provides one.
     gains_at: Callable[[State, jax.Array, jax.Array], jax.Array] | None = None
+    # Lazy-gain hooks (exact-greedy hot path).  None means the function's
+    # gains are cheap state lookups (graph-cut, disparity) or it simply
+    # opts out; the engines fall back to per-step full evaluation.
+    lazy: LazyHooks | None = None
 
 
 def gains_at(fn: SetFunction, state: State, K: jax.Array, cand: jax.Array) -> jax.Array:
@@ -93,6 +117,20 @@ def _fl_eval(mask: jax.Array, K: jax.Array) -> jax.Array:
     return jnp.sum(jnp.where(jnp.any(mask), best, 0.0))
 
 
+def _fl_delta_gains(
+    K: jax.Array, rows: jax.Array, c_old: jax.Array, c_new: jax.Array
+) -> jax.Array:
+    # Row gather: only the (b, n) block of rows whose cover moved is read.
+    Kb = K[rows, :].astype(jnp.float32)
+    return jnp.sum(
+        jax.nn.relu(Kb - c_new[:, None]) - jax.nn.relu(Kb - c_old[:, None]),
+        axis=0,
+    )
+
+
+_FL_LAZY = LazyHooks(cover=lambda c: c, delta_gains=_fl_delta_gains)
+
+
 facility_location = SetFunction(
     name="facility_location",
     init=_fl_init,
@@ -100,6 +138,7 @@ facility_location = SetFunction(
     update=_fl_update,
     evaluate=_fl_eval,
     gains_at=_fl_gains_at,
+    lazy=_FL_LAZY,
 )
 
 
@@ -228,7 +267,7 @@ def make_facility_location_pallas(*, interpret: bool = False,
                                interpret=interpret)
 
     return SetFunction("facility_location_pallas", _fl_init, gains, _fl_update,
-                       _fl_eval, gains_at=gains_at)
+                       _fl_eval, gains_at=gains_at, lazy=_FL_LAZY)
 
 
 REGISTRY = {

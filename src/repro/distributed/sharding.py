@@ -134,6 +134,35 @@ def param_shardings(mesh: Mesh, params: Any) -> Any:
 
 
 # --------------------------------------------------------------------------
+# selection preprocessing: ground-set-row mesh
+# --------------------------------------------------------------------------
+
+#: mesh axis name carrying the selection ground-set (row) axis
+SELECTION_AXIS = "sel"
+
+
+def selection_mesh(n_devices: int | None = None, *, axis: str = SELECTION_AXIS) -> Mesh:
+    """1-D device mesh for sharding the selection ground-set row axis.
+
+    The gram-free selection engines (``core.sharded``) shard the (n, d)
+    feature matrix over this axis so one class's ground set can exceed a
+    single device's memory; everything else they carry is O(n) and stays
+    replicated.  ``n_devices`` truncates to a prefix of ``jax.devices()``
+    (useful to keep the shard count a divisor of the padded class sizes);
+    the default uses every local device.  On CPU, force a multi-device mesh
+    with ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+    """
+    devs = jax.devices()
+    if n_devices is not None:
+        if not 1 <= n_devices <= len(devs):
+            raise ValueError(
+                f"n_devices={n_devices} out of range [1, {len(devs)}]"
+            )
+        devs = devs[:n_devices]
+    return Mesh(np.asarray(devs), (axis,))
+
+
+# --------------------------------------------------------------------------
 # activations / inputs
 # --------------------------------------------------------------------------
 

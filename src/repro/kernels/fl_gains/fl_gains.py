@@ -104,6 +104,72 @@ def _fl_gains_gram_free_kernel(z_ref, zc_ref, c_ref, out_ref):
         out_ref[...] += part
 
 
+def _fl_gains_gram_free_delta_kernel(z_ref, zc_ref, co_ref, cn_ref, out_ref):
+    i = pl.program_id(1)  # reduction (touched-rows) axis — innermost
+    z_blk = z_ref[...].astype(jnp.float32)    # (bi, d)
+    zc_blk = zc_ref[...].astype(jnp.float32)  # (bj, d)
+    co_blk = co_ref[...].astype(jnp.float32)  # (bi, 1)
+    cn_blk = cn_ref[...].astype(jnp.float32)  # (bi, 1)
+    sim = 0.5 + 0.5 * jax.lax.dot_general(
+        z_blk, zc_blk,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (bi, bj)
+    part = jnp.sum(
+        jnp.maximum(sim - cn_blk, 0.0) - jnp.maximum(sim - co_blk, 0.0),
+        axis=0, keepdims=True,
+    )  # (1, bj)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = part
+
+    @pl.when(i > 0)
+    def _acc():
+        out_ref[...] += part
+
+
+@functools.partial(jax.jit, static_argnames=("block_i", "block_j", "interpret"))
+def fl_gains_gram_free_delta_pallas(
+    z: jax.Array,
+    zc: jax.Array,
+    c_old: jax.Array,
+    c_new: jax.Array,
+    *,
+    block_i: int = 512,
+    block_j: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused lazy-greedy gain correction: both relu terms of the delta share
+    one on-the-fly similarity tile (see ``ref.fl_gains_gram_free_delta_ref``).
+
+    Args:
+      z: (b, d) touched ground rows; zc: (n_cand, d); c_old/c_new: (b,).
+      b % block_i == 0, n_cand % block_j == 0.
+    """
+    b, d = z.shape
+    n_cand = zc.shape[0]
+    bi = min(block_i, b)
+    bj = min(block_j, n_cand)
+    if b % bi or n_cand % bj:
+        raise ValueError(f"shape ({b},{n_cand}) not divisible by ({bi},{bj})")
+    grid = (n_cand // bj, b // bi)
+    out = pl.pallas_call(
+        _fl_gains_gram_free_delta_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bi, d), lambda j, i: (i, 0)),
+            pl.BlockSpec((bj, d), lambda j, i: (j, 0)),
+            pl.BlockSpec((bi, 1), lambda j, i: (i, 0)),
+            pl.BlockSpec((bi, 1), lambda j, i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bj), lambda j, i: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((1, n_cand), jnp.float32),
+        interpret=interpret,
+    )(z, zc, c_old[:, None], c_new[:, None])
+    return out[0]
+
+
 @functools.partial(jax.jit, static_argnames=("block_i", "block_j", "interpret"))
 def fl_gains_gram_free_pallas(
     z: jax.Array,

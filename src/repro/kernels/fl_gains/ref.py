@@ -43,3 +43,34 @@ def fl_gains_gram_free_ref(z: jax.Array, zc: jax.Array, c: jax.Array) -> jax.Arr
     c = c.astype(jnp.float32)
     sim = 0.5 + 0.5 * (z @ zc.T)
     return jnp.sum(jax.nn.relu(sim - c[:, None]), axis=0)
+
+
+def fl_gains_gram_free_delta_ref(
+    z: jax.Array, zc: jax.Array, c_old: jax.Array, c_new: jax.Array
+) -> jax.Array:
+    """Gram-free facility-location gain *delta* over a row subset.
+
+    The lazy greedy engine's correction term: for each candidate ``j``,
+
+        delta(j) = sum_i [relu(K_ij - c_new_i) - relu(K_ij - c_old_i)]
+
+    summed over the given ground rows only (``z`` holds just the rows whose
+    cover moved since the gains were cached).  Rows with ``c_old = c_new =
+    +inf`` contribute exact zeros — the padding contract for the engine's
+    fixed-size touched-rows buffer.
+
+    Args:
+      z:     (b, d) row-normalized features of the touched ground rows.
+      zc:    (n_cand, d) row-normalized candidate features.
+      c_old: (b,) cover of the touched rows before the last pick.
+      c_new: (b,) cover of the touched rows after the last pick.
+
+    Returns:
+      (n_cand,) float32 gain corrections (non-positive: cover only grows).
+    """
+    z = z.astype(jnp.float32)
+    zc = zc.astype(jnp.float32)
+    sim = 0.5 + 0.5 * (z @ zc.T)
+    new = jax.nn.relu(sim - c_new.astype(jnp.float32)[:, None])
+    old = jax.nn.relu(sim - c_old.astype(jnp.float32)[:, None])
+    return jnp.sum(new - old, axis=0)

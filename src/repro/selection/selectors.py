@@ -182,6 +182,9 @@ class MiloFixedConfig:
     k: int
     # select over features directly (O(n·d) memory) instead of the (n,n) Gram
     gram_free: bool = False
+    # shard the feature rows over all local devices (trajectory-identical;
+    # implies the gram-free route — see core.sharded)
+    shard_selection: bool = False
 
 
 @register("milo_fixed", MiloFixedConfig, paper="MILO (Fixed)",
@@ -191,8 +194,10 @@ class MiloFixedPlanSelector(Selector):
 
     def __init__(self, cfg: MiloFixedConfig):
         self.cfg = cfg
-        self._inner = legacy.MiloFixedSelector(cfg.features, cfg.k,
-                                               gram_free=cfg.gram_free)
+        self._inner = legacy.MiloFixedSelector(
+            cfg.features, cfg.k, gram_free=cfg.gram_free,
+            shard_selection=cfg.shard_selection,
+        )
 
     def plan(self, epoch: int) -> SelectionPlan:
         return uniform_plan(

@@ -81,6 +81,16 @@ class MiloSessionConfig:
     gram_free: bool = False
     bucket_classes: bool = True
     sge_vmapped: bool = True
+    # multi-device row-sharded selection (requires gram_free; trajectories
+    # identical to single-device, so artifacts stay portable across meshes)
+    shard_selection: bool = False
+    # lazy gain reuse for the WRE full-greedy pass + its full-recompute
+    # threshold (fraction of touched rows); FL hard functions only
+    lazy_gains: bool = False
+    lazy_threshold: float = 0.125
+    # bucketed SGE candidate counts from the true class geometry instead of
+    # the padded bucket's (changes the stochastic draws; see MiloPreprocessor)
+    exact_sge_candidates: bool = False
     # curriculum
     total_epochs: int = 40
     kappa: float = 1.0 / 6.0
@@ -114,6 +124,10 @@ class MiloSessionConfig:
             gram_free=self.gram_free,
             bucket_classes=self.bucket_classes,
             sge_vmapped=self.sge_vmapped,
+            shard_selection=self.shard_selection,
+            lazy_gains=self.lazy_gains,
+            lazy_threshold=self.lazy_threshold,
+            exact_sge_candidates=self.exact_sge_candidates,
         )
 
     def resolved_prep_seed(self) -> int:
@@ -277,11 +291,16 @@ class MiloSession:
                 "different data (feature fingerprint mismatch); pass "
                 "force=True to rebuild"
             )
-        # gram_free / bucket_classes change which selection trajectories the
-        # artifact holds, so a recorded value must agree; artifacts from
-        # before these knobs existed record neither and are accepted on the
-        # base config alone (same tolerance as prep_seed below).
-        for knob in ("gram_free", "bucket_classes"):
+        # gram_free / bucket_classes / lazy_gains / exact_sge_candidates
+        # change which selection trajectories the artifact holds, so a
+        # recorded value must agree; artifacts from before these knobs
+        # existed record neither and are accepted on the base config alone
+        # (same tolerance as prep_seed below).  shard_selection is recorded
+        # but deliberately NOT checked: sharded runs select identically to
+        # single-device up to sub-ulp near-tie resolution (see core.sharded),
+        # an accepted tolerance so artifacts stay portable across meshes.
+        for knob in ("gram_free", "bucket_classes", "lazy_gains",
+                     "exact_sge_candidates"):
             stored_knob = md.config.get(knob)
             expected_knob = getattr(cfg, knob)
             if stored_knob is not None and bool(stored_knob) != expected_knob:
@@ -290,6 +309,17 @@ class MiloSession:
                     f"{{{knob!r}: ({stored_knob}, {expected_knob})}} "
                     "(stored, expected)"
                 )
+        # with lazy gains active the recompute threshold shapes the drift
+        # cadence (and thus near-tie resolution), so it must agree too
+        stored_thr = md.config.get("lazy_threshold")
+        if (cfg.lazy_gains and bool(md.config.get("lazy_gains"))
+                and stored_thr is not None
+                and float(stored_thr) != cfg.lazy_threshold):
+            raise MetadataMismatchError(
+                f"{cfg.metadata_path}: config mismatch on "
+                f"{{'lazy_threshold': ({stored_thr}, {cfg.lazy_threshold})}} "
+                "(stored, expected)"
+            )
         stored_seed = md.config.get("prep_seed")
         expected_seed = cfg.resolved_prep_seed()
         if stored_seed is not None and stored_seed != expected_seed:

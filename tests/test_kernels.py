@@ -5,7 +5,11 @@ import numpy as np
 import pytest
 
 from repro.kernels.fl_gains import ops as fl_ops
-from repro.kernels.fl_gains.ref import fl_gains_gram_free_ref, fl_gains_ref
+from repro.kernels.fl_gains.ref import (
+    fl_gains_gram_free_delta_ref,
+    fl_gains_gram_free_ref,
+    fl_gains_ref,
+)
 from repro.kernels.flash_attention import ops as fa_ops
 from repro.kernels.flash_attention.ref import gqa_attention_ref
 from repro.kernels.similarity import ops as sim_ops
@@ -55,6 +59,33 @@ def test_fl_gains_gram_free_kernel_sweep(n, ncand, d, dtype):
     ref = fl_gains_gram_free_ref(z, zc, c)
     np.testing.assert_allclose(out, ref, **_tol(dtype))
     assert out.dtype == jnp.float32
+
+
+@pytest.mark.parametrize("b,ncand,d", [(32, 256, 16), (100, 130, 48), (1, 64, 8)])
+def test_fl_gains_gram_free_delta_kernel_sweep(b, ncand, d):
+    """Fused lazy-gain delta kernel vs oracle, incl. the inf-padding contract
+    (rows with c_old = c_new = +inf contribute exact zeros) and the algebraic
+    identity delta == restricted_gains(c_new) - restricted_gains(c_old)."""
+    z = jnp.asarray(RNG.normal(size=(ncand, d)).astype(np.float32))
+    z = z / jnp.maximum(jnp.linalg.norm(z, axis=-1, keepdims=True), 1e-8)
+    zr = z[:b] if b <= ncand else jnp.concatenate([z] * (b // ncand + 1))[:b]
+    c_old = jnp.asarray(RNG.uniform(size=(b,)).astype(np.float32))
+    c_new = jnp.minimum(c_old + RNG.uniform(size=(b,)).astype(np.float32), 1.0)
+    # mark a few rows as padding (both covers infinite)
+    pad = jnp.arange(b) % 5 == 3
+    c_old = jnp.where(pad, jnp.inf, c_old)
+    c_new = jnp.where(pad, jnp.inf, c_new)
+    out = fl_ops.fl_gains_gram_free_delta(zr, z, c_old, c_new,
+                                          block_i=64, block_j=64,
+                                          interpret=True)
+    ref = fl_gains_gram_free_delta_ref(zr, z, c_old, c_new)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+    split = (fl_gains_gram_free_ref(zr, z, c_new)
+             - fl_gains_gram_free_ref(zr, z, c_old))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(split),
+                               rtol=1e-4, atol=1e-4)
+    assert np.all(np.asarray(out) <= 1e-5), "cover only grows: delta <= 0"
 
 
 @pytest.mark.parametrize(

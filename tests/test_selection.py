@@ -300,6 +300,41 @@ def test_session_rejects_artifact_from_different_prep_seed(tmp_path, feats, labe
         MiloSession(MiloSessionConfig(**base, seed=1)).preprocess(feats, labels)
 
 
+def test_session_rejects_artifact_from_different_engine_knobs(tmp_path, feats, labels):
+    """lazy_gains / exact_sge_candidates change the recorded trajectories, so
+    a recorded mismatch must refuse reuse; shard_selection selects identically
+    and is deliberately tolerated (artifacts stay portable across meshes)."""
+    path = os.path.join(tmp_path, "artifact.npz")
+    base = dict(subset_fraction=K / N, n_sge_subsets=3, total_epochs=3,
+                gram_block=64, metadata_path=path)
+    MiloSession(MiloSessionConfig(**base)).preprocess(feats, labels)
+    with pytest.raises(MetadataMismatchError, match="exact_sge_candidates"):
+        MiloSession(MiloSessionConfig(**base, exact_sge_candidates=True)
+                    ).preprocess(feats, labels)
+    with pytest.raises(MetadataMismatchError, match="lazy_gains"):
+        MiloSession(MiloSessionConfig(**base, lazy_gains=True)
+                    ).preprocess(feats, labels)
+    # with lazy gains active the recompute threshold is trajectory-shaping:
+    # an artifact built under one threshold must refuse another
+    lazy_path = os.path.join(os.path.dirname(path), "lazy.npz")
+    lazy_base = dict(base, metadata_path=lazy_path, lazy_gains=True,
+                     hard_fn="facility_location")
+    MiloSession(MiloSessionConfig(**lazy_base)).preprocess(feats, labels)
+    with pytest.raises(MetadataMismatchError, match="lazy_threshold"):
+        MiloSession(MiloSessionConfig(**lazy_base, lazy_threshold=0.5)
+                    ).preprocess(feats, labels)
+    reusing = MiloSession(MiloSessionConfig(**base, shard_selection=True,
+                                            gram_free=False))
+    # shard_selection=True without devices/gram_free never alters results;
+    # the artifact check must not block on it
+    with pytest.raises(MetadataMismatchError, match="gram_free"):
+        # ...but gram_free itself is still enforced
+        MiloSession(MiloSessionConfig(**base, gram_free=True)
+                    ).preprocess(feats, labels)
+    md = reusing.preprocess(feats, labels)
+    assert reusing.loaded_from_artifact and md.config.get("shard_selection") is False
+
+
 def test_session_rejects_artifact_from_different_dataset(tmp_path, feats, labels):
     path = os.path.join(tmp_path, "artifact.npz")
     cfg = MiloSessionConfig(subset_fraction=K / N, n_sge_subsets=3,

@@ -28,8 +28,9 @@ from repro.core import (
     sge,
     stochastic_greedy,
 )
+from repro.core import lazy_greedy
 from repro.core.gram_free import make_gram_free_facility_location
-from repro.core.greedy import _sge_bank, stochastic_candidate_count
+from repro.core.greedy import _NEG, _sge_bank, stochastic_candidate_count
 from repro.core.similarity import normalize_rows
 from repro.core.submodular import (
     disparity_min,
@@ -345,6 +346,190 @@ def test_preprocessor_singleton_class():
             assert len(set(s.tolist())) == md.k
             assert s.max() < 41
         assert np.isfinite(md.wre_probs).all()
+
+
+# ---------------------------------------------------------------------------
+# lazy gain reuse (greedy.lazy_greedy / greedy_importance(lazy_budget=...))
+# ---------------------------------------------------------------------------
+
+def _fl_fixtures(n: int, d: int = 16, seed: int = 20):
+    z, K = _fixture(n, d=d, seed=seed)
+    return {"gram": (facility_location, K),
+            "gram_free": (make_gram_free_facility_location(), normalize_rows(z))}
+
+
+@pytest.mark.parametrize("variant", ["gram", "gram_free"])
+def test_lazy_greedy_matches_exact_trajectory(variant):
+    """Within the shortlist horizon (k = n/4) the cached-gain engine picks
+    identically to eager greedy; gains agree to reduction-order rounding."""
+    fn, K = _fl_fixtures(192)[variant]
+    k, budget = 48, 24
+    a = greedy(fn, K, k)
+    b = lazy_greedy(fn, K, k, budget=budget)
+    np.testing.assert_array_equal(np.asarray(a.indices), np.asarray(b.indices))
+    np.testing.assert_allclose(np.asarray(a.gains), np.asarray(b.gains),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_lazy_greedy_counter_reduction():
+    """Acceptance mechanism: the traced counter shows >= 3x fewer ground-row
+    contractions than the eager engine's n-per-step on a full FL pass."""
+    fn, z = _fl_fixtures(256)["gram_free"]
+    n = 256
+    res = lazy_greedy(fn, z, n, budget=n // 8)
+    rows = np.asarray(res.rows_evaluated)
+    assert set(rows.tolist()) <= {n // 8, n}
+    eager_evals = n * n
+    lazy_evals = n + rows.sum()  # + the init-time full evaluation
+    assert eager_evals / lazy_evals >= 3.0, (eager_evals, lazy_evals)
+    # early steps overflow the touched budget (full recompute), late steps
+    # stay within it — the decaying-touched-set structure the engine exploits
+    assert rows[0] == n and rows[-1] == n // 8
+
+
+def test_lazy_greedy_importance_equivalent_order():
+    """A full lazy pass reaches exhaustion: the greedy order may resolve
+    sub-ulp near-ties differently from the eager pass (documented), but it
+    selects the same elements with the same gain sequence."""
+    fn, z = _fl_fixtures(160)["gram_free"]
+    a = greedy(fn, z, 160)
+    b = lazy_greedy(fn, z, 160, budget=20)
+    assert set(np.asarray(a.indices).tolist()) == set(np.asarray(b.indices).tolist())
+    np.testing.assert_allclose(np.asarray(a.gains), np.asarray(b.gains),
+                               rtol=1e-4, atol=1e-5)
+    ia = np.asarray(greedy_importance(fn, z))
+    ib = np.asarray(greedy_importance(fn, z, lazy_budget=20))
+    np.testing.assert_allclose(np.sort(ia), np.sort(ib), rtol=1e-4, atol=1e-5)
+
+
+def test_lazy_greedy_importance_bucketed_padding():
+    """Lazy reuse composes with size bucketing: padded rows are never touched
+    (infinite cover), padded elements never selected, importance 0."""
+    fn, z = _fl_fixtures(128)["gram_free"]
+    zp = jnp.zeros((160, z.shape[1]), z.dtype).at[:128].set(z)
+    valid = jnp.arange(160) < 128
+    g = np.asarray(greedy_importance(fn, zp, valid=valid, lazy_budget=16))
+    assert np.all(g[128:] == 0.0)
+    ref = np.asarray(greedy_importance(fn, z, lazy_budget=16))
+    np.testing.assert_allclose(np.sort(g[:128]), np.sort(ref), rtol=1e-4, atol=1e-5)
+
+
+def test_lazy_greedy_requires_hooks():
+    _, K = _fixture(32)
+    with pytest.raises(ValueError, match="lazy hooks"):
+        lazy_greedy(graph_cut, K, 4, budget=8)
+
+
+def test_lazy_budget_ignored_without_hooks():
+    """greedy_importance(lazy_budget=...) on a hook-less function falls back
+    to the eager pass instead of erroring (preprocessor wiring relies on it)."""
+    _, K = _fixture(48)
+    a = np.asarray(greedy_importance(disparity_min, K))
+    b = np.asarray(greedy_importance(disparity_min, K, lazy_budget=8))
+    np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# post-exhaustion step guard (bucketed greedy_importance satellite)
+# ---------------------------------------------------------------------------
+
+def test_exhaustion_guard_skips_gain_evaluations():
+    """The lax.cond guard must stop evaluating gains after the valid pool is
+    exhausted: a callback-counting set function sees exactly n_valid calls on
+    an n_pad-step bucketed importance run — with identical outputs."""
+    calls = []
+
+    def counting_gains(state, K):
+        jax.debug.callback(lambda: calls.append(1))
+        return disparity_min.gains(state, K)
+
+    fn = dataclasses.replace(disparity_min, gains=counting_gains)
+    _, K = _fixture(51, seed=11)
+    Kp, valid = _pad_problem(K, 64)
+    g = greedy_importance(fn, Kp, valid=valid)
+    jax.effects_barrier()
+    assert len(calls) == 51, f"guard leaked {len(calls) - 51} padded-step evals"
+    ref = greedy_importance(disparity_min, Kp, valid=valid)
+    np.testing.assert_array_equal(np.asarray(g), np.asarray(ref))
+
+
+def test_exhaustion_guard_emits_sentinel_outputs():
+    """Skipped steps record (index 0, _NEG) — exactly what the unguarded
+    degenerate argmax produced, so the importance scatter is unchanged."""
+    _, K = _fixture(20, seed=12)
+    Kp, valid = _pad_problem(K, 32)
+    r = greedy(facility_location, Kp, 32, valid=valid)
+    assert np.all(np.asarray(r.indices)[20:] == 0)
+    assert np.all(np.asarray(r.gains)[20:] == _NEG)
+    np.testing.assert_array_equal(
+        np.asarray(r.indices)[:20],
+        np.asarray(greedy(facility_location, K, 20).indices),
+    )
+
+
+# ---------------------------------------------------------------------------
+# bucketed SGE candidate-count satellite (s from the valid geometry)
+# ---------------------------------------------------------------------------
+
+def test_sge_explicit_candidate_count():
+    """sge(s=...) overrides the derived draw size and matches per-run
+    stochastic greedy with the same s under the same key."""
+    _, K = _fixture(90, seed=13)
+    key = jax.random.PRNGKey(9)
+    a = np.asarray(sge(facility_location, K, 10, key, n_subsets=3, s=7))
+    keys = jax.random.split(key, 3)
+    b = np.stack([
+        np.asarray(stochastic_greedy(facility_location, K, 10, kk, s=7).indices)
+        for kk in keys
+    ])
+    np.testing.assert_array_equal(a, b)
+
+
+def test_exact_sge_candidates_quantifies_bucketing_approximation():
+    """Bucketed SGE draws s from the padded geometry by default;
+    exact_sge_candidates=True restores the per-class (n_c, k_c) draw size.
+    The deterministic WRE pass is untouched either way; the stochastic bank
+    changes but stays a valid near-optimal sample (quantified overlap)."""
+    rng = np.random.default_rng(21)
+    sizes = [75, 60, 44, 37]  # buckets 128/64/64/64: padded s != exact s
+    labels = np.concatenate([np.full(s, i) for i, s in enumerate(sizes)])
+    feats = rng.normal(size=(len(labels), 10)).astype(np.float32)
+    key = jax.random.PRNGKey(4)
+    pad = MiloPreprocessor(subset_fraction=0.2).preprocess(feats, labels, key)
+    exact = MiloPreprocessor(subset_fraction=0.2,
+                             exact_sge_candidates=True).preprocess(feats, labels, key)
+    np.testing.assert_array_equal(pad.wre_importance, exact.wre_importance)
+    assert exact.config["exact_sge_candidates"] is True
+    # the draw geometry genuinely differs for at least one class...
+    assert any(
+        stochastic_candidate_count(s, max(1, round(0.2 * s)), 0.01)
+        != stochastic_candidate_count(
+            1 << (s - 1).bit_length(),
+            1 << (max(1, round(0.2 * s)) - 1).bit_length(), 0.01)
+        for s in sizes
+    )
+    # ...so the banks differ, while remaining comparable near-optimal
+    # subsets of the same classes (majority overlap)
+    assert not np.array_equal(pad.sge_subsets, exact.sge_subsets)
+    overlap = np.mean([
+        len(set(a.tolist()) & set(b.tolist())) / pad.k
+        for a, b in zip(pad.sge_subsets, exact.sge_subsets)
+    ])
+    assert 0.2 <= overlap < 1.0, f"overlap {overlap:.2f}"
+    for s in exact.sge_subsets:
+        assert len(set(s.tolist())) == exact.k
+
+
+def test_exact_sge_candidates_noop_when_unbucketed():
+    rng = np.random.default_rng(22)
+    feats = rng.normal(size=(150, 8)).astype(np.float32)
+    labels = rng.integers(0, 3, size=150)
+    a = MiloPreprocessor(subset_fraction=0.1, bucket_classes=False).preprocess(
+        feats, labels, jax.random.PRNGKey(1))
+    b = MiloPreprocessor(subset_fraction=0.1, bucket_classes=False,
+                         exact_sge_candidates=True).preprocess(
+        feats, labels, jax.random.PRNGKey(1))
+    np.testing.assert_array_equal(a.sge_subsets, b.sge_subsets)
 
 
 # ---------------------------------------------------------------------------
