@@ -27,6 +27,7 @@ from repro.core.sharded import (
     make_sharded_gram_free,
     sharded_greedy,
     sharded_greedy_importance,
+    sharded_lazy_greedy,
     sharded_sge,
     sharded_stochastic_greedy,
 )
@@ -67,6 +68,7 @@ __all__ = [
     "make_sharded_gram_free",
     "sharded_greedy",
     "sharded_greedy_importance",
+    "sharded_lazy_greedy",
     "sharded_sge",
     "sharded_stochastic_greedy",
     "make_gram_free_disparity_min",

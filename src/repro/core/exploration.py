@@ -28,14 +28,38 @@ def taylor_softmax(g: jax.Array, axis: int = -1) -> jax.Array:
 
 
 @functools.partial(jax.jit, static_argnames=("k",))
-def weighted_sample_without_replacement(
-    key: jax.Array, p: jax.Array, k: int
-) -> jax.Array:
-    """Draw k distinct indices with probabilities ∝ p (Gumbel top-k)."""
-    logp = jnp.log(jnp.maximum(p, 1e-30))
+def _wswor(key: jax.Array, p: jax.Array, k: int) -> jax.Array:
+    # Zero-probability entries are masked to -inf, not floored: flooring at
+    # 1e-30 let masked/degenerate elements win top-k slots whenever k
+    # exceeded the nonzero support.  -inf + Gumbel stays -inf, so a masked
+    # element can never be drawn; positive entries keep the exact
+    # log(max(p, 1e-30)) value the old formula produced, so valid draws are
+    # bit-for-bit unchanged.
+    logp = jnp.where(p > 0.0, jnp.log(jnp.maximum(p, 1e-30)), -jnp.inf)
     z = logp + jax.random.gumbel(key, p.shape)
     _, idx = jax.lax.top_k(z, k)
     return idx.astype(jnp.int32)
+
+
+def weighted_sample_without_replacement(
+    key: jax.Array, p: jax.Array, k: int
+) -> jax.Array:
+    """Draw k distinct indices with probabilities ∝ p (Gumbel top-k).
+
+    Requires ``k`` ≤ the nonzero support of ``p``: sampling without
+    replacement cannot produce more distinct indices than there are elements
+    with positive mass.  The guard runs host-side on concrete inputs (the
+    selector's normal call pattern); inside a trace the masked Gumbel race
+    still guarantees zero-probability indices lose to every positive one.
+    """
+    if not isinstance(p, jax.core.Tracer):
+        support = int(jnp.count_nonzero(jnp.asarray(p) > 0.0))
+        if k > support:
+            raise ValueError(
+                f"cannot draw k={k} distinct indices from a distribution "
+                f"with only {support} nonzero-probability elements"
+            )
+    return _wswor(key, p, k)
 
 
 class WREDistribution(NamedTuple):

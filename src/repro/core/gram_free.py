@@ -30,8 +30,17 @@ facility-location column reductions (same values, same reduction order); the
 graph-cut column sum is computed in closed form (0.5·n + 0.5·z·Σz) so its
 float rounding can differ from a materialized row sum by ~1 ulp — tests
 assert trajectory equality on fixtures and allclose on gains.
+
+Every factory is memoized on its (hashable) params: the greedy engines jit
+with the ``SetFunction`` as a static argument, and a frozen dataclass of
+closures hashes by closure identity — rebuilding the function each
+``preprocess()`` call would therefore recompile every engine every session.
+Returning the same object for the same params keeps those jit caches (and
+``core.sharded._compiled``'s lru cache) warm across calls.
 """
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -68,6 +77,7 @@ def _sim_matrix(z: jax.Array) -> jax.Array:
 # Facility location:  state c[i] = max_{j in S} K_ij  (+inf on padding rows)
 # ---------------------------------------------------------------------------
 
+@functools.lru_cache(maxsize=64)
 def make_gram_free_facility_location(
     *,
     use_pallas: bool = False,
@@ -119,6 +129,7 @@ def make_gram_free_facility_location(
 # Graph cut: colsum in closed form, cur accumulated column-wise as usual
 # ---------------------------------------------------------------------------
 
+@functools.lru_cache(maxsize=64)
 def make_gram_free_graph_cut(lam: float = 0.4) -> SetFunction:
     def init(z: jax.Array) -> State:
         sumsq = _row_sumsq(z)
@@ -164,6 +175,7 @@ def make_gram_free_graph_cut(lam: float = 0.4) -> SetFunction:
 # Disparity-sum / disparity-min: state-only gains, O(n·d) column updates
 # ---------------------------------------------------------------------------
 
+@functools.lru_cache(maxsize=64)
 def make_gram_free_disparity_sum() -> SetFunction:
     def init(z: jax.Array) -> State:
         return jnp.zeros((z.shape[0],), jnp.float32)
@@ -186,6 +198,7 @@ def make_gram_free_disparity_sum() -> SetFunction:
                        gains_at=gains_at)
 
 
+@functools.lru_cache(maxsize=64)
 def make_gram_free_disparity_min() -> SetFunction:
     def init(z: jax.Array) -> State:
         n = z.shape[0]

@@ -33,6 +33,11 @@ Engines:
                             cover moved since the last pick are re-contracted
                             (``SetFunction.lazy`` hooks), with a full
                             recompute fallback past a touched-rows budget.
+                            Composes with the multi-device ``sel`` mesh —
+                            every carry it threads (cached gains, cover,
+                            touched mask, rows counter) is replicated under
+                            ``shard_map``, so ``core.sharded`` reuses this
+                            engine unchanged via sharded lazy hooks.
   * ``stochastic_greedy`` — [Mirzasoleiman et al. '15]; candidate set of size
                             s = (n/k) * log(1/eps) per step (paper SGE inner).
   * ``sge``               — the full bank: vmapped by default, sequential for

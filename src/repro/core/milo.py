@@ -88,9 +88,13 @@ class MiloPreprocessor:
     # Lazy gain reuse for the WRE full-greedy pass (facility-location hard
     # functions only): cache the gain vector and correct it over just the
     # rows whose cover the last pick moved, with a full recompute once the
-    # touched fraction exceeds lazy_threshold.  Near-ties below float32
-    # rounding can resolve differently from the eager pass (see
-    # greedy.lazy_greedy); importance is an equally valid greedy order.
+    # touched fraction exceeds lazy_threshold.  Composes with
+    # shard_selection: classes routed to the mesh run the same lazy engine
+    # inside shard_map (sharded_greedy_importance(lazy_budget=...)), so the
+    # largest classes get both the memory split AND the fewest-FLOPs path.
+    # Near-ties below float32 rounding can resolve differently from the
+    # eager pass (see greedy.lazy_greedy); importance is an equally valid
+    # greedy order.
     lazy_gains: bool = False
     lazy_threshold: float = 0.125
     # Bucketed SGE draws its per-step candidate count s from the PADDED
@@ -113,6 +117,15 @@ class MiloPreprocessor:
         return sharded_mod.make_sharded_gram_free(
             name, n_shards=mesh.shape[sharded_mod.AXIS], **kwargs
         )
+
+    def _lazy_budget(self, n_run: int, fn: submodular.SetFunction) -> int | None:
+        """Touched-rows budget for the WRE full-greedy pass, or None when
+        lazy gains are off / the set function has no lazy hooks / the
+        threshold would not save anything."""
+        if not self.lazy_gains or fn.lazy is None:
+            return None
+        budget = max(1, int(n_run * self.lazy_threshold))
+        return None if budget >= n_run else budget
 
     def _set_fn(self, name: str) -> submodular.SetFunction:
         if self.gram_free:
@@ -251,17 +264,17 @@ class MiloPreprocessor:
                     )
                 per_class_sge.append(np.asarray(subs, np.int64)[:, :k_c])
                 if shard_ok:
+                    # lazy + sharded compose: the mesh classes run the same
+                    # cached-gain engine inside shard_map instead of silently
+                    # falling back to eager ring gains
                     imp_full = sharded_mod.sharded_greedy_importance(
                         hard_sh, A, mesh=mesh, valid=valid,
+                        lazy_budget=self._lazy_budget(n_run, hard_sh),
                     )
                 else:
-                    lazy_budget = None
-                    if self.lazy_gains and hard.lazy is not None:
-                        lazy_budget = max(1, int(n_run * self.lazy_threshold))
-                        if lazy_budget >= n_run:
-                            lazy_budget = None  # nothing to save
                     imp_full = greedy_importance(
-                        hard, A, valid=valid, lazy_budget=lazy_budget,
+                        hard, A, valid=valid,
+                        lazy_budget=self._lazy_budget(n_run, hard),
                     )
                 imp = np.asarray(imp_full, np.float32)[:n_c]
             wre_importance[part.indices] = imp

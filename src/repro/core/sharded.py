@@ -24,18 +24,36 @@ engines inside ``shard_map``:
     accumulates partial gains with the same ``fl_gains_gram_free`` kernel the
     single-device path uses (the kernel's i-axis loop is already shard
     shaped), visiting candidate blocks via a ring ``ppermute`` so full ``z``
-    is never materialized, then combines with ``psum``.  The cross-shard sum
-    reassociates float additions, so FL/graph-cut *gain values* can differ
-    from the single-device path by ~1 ulp; selected trajectories are
-    bit-identical on all tested fixtures (argmax gaps are many orders above
-    ulp noise).
+    is never materialized, then combines with ``psum``.  The first block of
+    the ring is the shard's own ``z_local`` (no rotation needed), so a full
+    gains evaluation issues exactly ``n_shards - 1`` hops — statically
+    countable in the jaxpr because the schedule is unrolled over the (static)
+    shard count.  The cross-shard sum reassociates float additions, so
+    FL/graph-cut *gain values* can differ from the single-device path by
+    ~1 ulp; selected trajectories are bit-identical on all tested fixtures
+    (argmax gaps are many orders above ulp noise).
+  * Facility location also exposes the ``SetFunction.lazy`` hooks, so
+    ``greedy.lazy_greedy`` runs unchanged inside ``shard_map``: the cover and
+    the cached gain vector are replicated, and the delta correction takes a
+    *ring-free* candidate path — the touched rows are gathered exactly via
+    the one-owner ``psum`` gather (a ``budget × d`` block, small by
+    construction), each shard contracts them against its OWN candidate block
+    through ``fl_gains_gram_free_delta``, and an ordered ``all_gather``
+    concatenates the per-shard corrections.  The delta values are bit-exact
+    against the single-device delta (same per-candidate reduction order);
+    only the cached base gains carry the ring ``psum``'s ~1 ulp.
 
-``sharded_greedy`` / ``sharded_stochastic_greedy`` / ``sharded_sge`` /
-``sharded_greedy_importance`` wrap the four engines; they require
-``n % ndev == 0`` (the preprocessor's power-of-two buckets satisfy this for
-any pow2 mesh) and fall back is the caller's choice — ``MiloPreprocessor``
-runs non-divisible (tiny) classes on the single-device path, which is
-trajectory-identical anyway.
+``sharded_greedy`` / ``sharded_lazy_greedy`` / ``sharded_stochastic_greedy``
+/ ``sharded_sge`` / ``sharded_greedy_importance`` wrap the engines; they
+require ``n % ndev == 0`` (the preprocessor's power-of-two buckets satisfy
+this for any pow2 mesh) and fall back is the caller's choice —
+``MiloPreprocessor`` runs non-divisible (tiny) classes on the single-device
+path, which is trajectory-identical anyway.
+
+The ``make_sharded_*`` factories are memoized on their (hashable) params:
+two ``preprocess()`` calls with the same knobs receive the *same*
+``SetFunction`` object, so ``_compiled``'s lru cache and the engines' jit
+static-arg caches hit instead of recompiling every session.
 """
 from __future__ import annotations
 
@@ -54,13 +72,15 @@ from repro.core.gram_free import (
 )
 from repro.core.greedy import (
     GreedyResult,
+    LazyGreedyResult,
     _sge_bank,
     greedy,
     greedy_importance,
+    lazy_greedy,
     stochastic_candidate_count,
     stochastic_greedy,
 )
-from repro.core.submodular import SetFunction, State
+from repro.core.submodular import LazyHooks, SetFunction, State
 from repro.distributed.sharding import SELECTION_AXIS as AXIS
 
 
@@ -119,6 +139,7 @@ def _gathered_z_evaluate(base_evaluate):
 # sharded set functions (the engines' "K" argument is the per-device z shard)
 # ---------------------------------------------------------------------------
 
+@functools.lru_cache(maxsize=64)
 def make_sharded_facility_location(
     *,
     n_shards: int,
@@ -129,7 +150,8 @@ def make_sharded_facility_location(
     block_j: int = 512,
 ) -> SetFunction:
     """Facility location with the cover vector replicated and all gain
-    reductions computed per shard through ``fl_gains_gram_free``."""
+    reductions computed per shard through ``fl_gains_gram_free``; exposes
+    ``lazy`` hooks so ``lazy_greedy`` composes with the mesh."""
     from repro.kernels.fl_gains import ops as fl_ops
 
     base = make_gram_free_facility_location(
@@ -149,26 +171,28 @@ def make_sharded_facility_location(
 
     def gains(c: State, z_local: jax.Array) -> jax.Array:
         # Ring schedule: candidate blocks visit every shard via ppermute, so
-        # each shard accumulates its i-axis partial for ALL n candidates while
-        # holding at most two (n/ndev, d) blocks; psum combines the partials.
+        # each shard accumulates its i-axis partial for ALL n candidates
+        # while holding at most two (n/ndev, d) blocks; psum combines the
+        # partials.  The t = 0 block is the shard's own z_local, so the
+        # schedule needs exactly n_shards - 1 hops; unrolling over the
+        # static shard count keeps that hop count a static property of the
+        # program (one ppermute eqn per hop in the jaxpr) instead of hiding
+        # an extra, discarded rotation inside a fori_loop.
         chunk = z_local.shape[0]
         me = jax.lax.axis_index(axis)
         c_loc = _slice_mine(c, z_local, axis)
         perm = [(i, (i - 1) % n_shards) for i in range(n_shards)]
 
-        def body(t, carry):
-            blk, out = carry
-            g_blk = _kernel(z_local, blk, c_loc)
+        blk = z_local
+        out = jnp.zeros((n_shards * chunk,), jnp.float32)
+        for t in range(n_shards):
+            if t:
+                blk = jax.lax.ppermute(blk, axis, perm)
             out = jax.lax.dynamic_update_slice(
-                out, g_blk, (((me + t) % n_shards) * chunk,)
+                out, _kernel(z_local, blk, c_loc),
+                (((me + t) % n_shards) * chunk,),
             )
-            return jax.lax.ppermute(blk, axis, perm), out
-
-        _, part = jax.lax.fori_loop(
-            0, n_shards, body,
-            (z_local, jnp.zeros((n_shards * chunk,), jnp.float32)),
-        )
-        return jax.lax.psum(part, axis)
+        return jax.lax.psum(out, axis)
 
     def gains_at(c: State, z_local: jax.Array, cand: jax.Array) -> jax.Array:
         zc = _gather_rows(z_local, cand, axis)
@@ -178,11 +202,28 @@ def make_sharded_facility_location(
     def update(c: State, z_local: jax.Array, j: jax.Array) -> State:
         return jnp.maximum(c, _sim_col(z_local, j, axis))
 
+    def delta_gains(z_local: jax.Array, rows: jax.Array, c_old: jax.Array,
+                    c_new: jax.Array) -> jax.Array:
+        # Ring-free candidate path: the touched rows (budget × d, small by
+        # construction) are gathered exactly via the one-owner psum, each
+        # shard corrects its OWN candidate block, and the ordered all_gather
+        # concatenates — per-candidate reduction order matches the
+        # single-device delta, so the correction itself is bit-exact.
+        zr = _gather_rows(z_local, rows, axis)
+        d_loc = fl_ops.fl_gains_gram_free_delta(
+            zr, z_local, c_old, c_new, block_i=block_i, block_j=block_j,
+            use_pallas=use_pallas, interpret=interpret,
+        )
+        return jax.lax.all_gather(d_loc, axis, tiled=True)
+
     name = "sharded_facility_location" + ("_pallas" if use_pallas else "")
     return SetFunction(name, init, gains, update,
-                       _gathered_z_evaluate(base.evaluate), gains_at=gains_at)
+                       _gathered_z_evaluate(base.evaluate), gains_at=gains_at,
+                       lazy=LazyHooks(cover=lambda c: c,
+                                      delta_gains=delta_gains))
 
 
+@functools.lru_cache(maxsize=64)
 def make_sharded_graph_cut(lam: float = 0.4, *, n_shards: int,
                            axis: str = AXIS) -> SetFunction:
     base = make_gram_free_graph_cut(lam)
@@ -216,6 +257,7 @@ def make_sharded_graph_cut(lam: float = 0.4, *, n_shards: int,
                        gains_at=base.gains_at)
 
 
+@functools.lru_cache(maxsize=64)
 def make_sharded_disparity_sum(*, n_shards: int, axis: str = AXIS) -> SetFunction:
     base = make_gram_free_disparity_sum()
 
@@ -230,6 +272,7 @@ def make_sharded_disparity_sum(*, n_shards: int, axis: str = AXIS) -> SetFunctio
                        gains_at=base.gains_at)
 
 
+@functools.lru_cache(maxsize=64)
 def make_sharded_disparity_min(*, n_shards: int, axis: str = AXIS) -> SetFunction:
     from repro.core.submodular import _DMIN_CAP
 
@@ -314,6 +357,12 @@ def _compiled(kind: str, fn: SetFunction, mesh: Mesh, axis: str, n: int,
         def inner(zs, v):
             return greedy(fn, zs, k, valid=v, n=n)
 
+    elif kind == "lazy":
+        k, budget = extra
+
+        def inner(zs, v):
+            return lazy_greedy(fn, zs, k, budget=budget, valid=v, n=n)
+
     elif kind == "stochastic":
         k, s = extra
 
@@ -331,8 +380,11 @@ def _compiled(kind: str, fn: SetFunction, mesh: Mesh, axis: str, n: int,
 
         specs["in_specs"] = (P(axis, None), P(None), P(None))
     elif kind == "importance":
+        (lazy_budget,) = extra
+
         def inner(zs, v):
-            return greedy_importance(fn, zs, valid=v, n=n)
+            return greedy_importance(fn, zs, valid=v, n=n,
+                                     lazy_budget=lazy_budget)
 
     else:  # pragma: no cover
         raise ValueError(kind)
@@ -354,6 +406,28 @@ def sharded_greedy(
     n = _check_shardable(z, mesh, axis)
     run = _compiled("greedy", fn, mesh, axis, n, k)
     return GreedyResult(*run(z, _valid_or_all(n, valid)))
+
+
+def sharded_lazy_greedy(
+    fn: SetFunction, z: jax.Array, k: int, *, budget: int, mesh: Mesh,
+    axis: str = AXIS, valid: jax.Array | None = None,
+) -> LazyGreedyResult:
+    """``lazy_greedy`` with z row-sharded over ``mesh``.
+
+    The cached gain vector is replicated, so the engine's argmax/touched-row
+    logic runs unchanged; only the gain *evaluations* are sharded — full
+    recomputes via the (n_shards - 1)-hop ring, delta corrections via the
+    ring-free gathered-rows path.  ``rows_evaluated`` is the same traced
+    counter the single-device engine returns (``budget`` on a lazy step,
+    ``n`` on a fallback recompute), counting *ground rows contracted* — the
+    per-shard split of each contraction does not change what was evaluated.
+
+    Trajectories match the single-device ``lazy_greedy`` wherever argmax gaps
+    exceed the ring psum's ~1 ulp reassociation noise — on the test fixtures
+    that is every step (indices bit-identical, gains ≤ 1 ulp)."""
+    n = _check_shardable(z, mesh, axis)
+    run = _compiled("lazy", fn, mesh, axis, n, k, budget)
+    return LazyGreedyResult(*run(z, _valid_or_all(n, valid)))
 
 
 def sharded_stochastic_greedy(
@@ -384,9 +458,15 @@ def sharded_sge(
 
 def sharded_greedy_importance(
     fn: SetFunction, z: jax.Array, *, mesh: Mesh, axis: str = AXIS,
-    valid: jax.Array | None = None,
+    valid: jax.Array | None = None, lazy_budget: int | None = None,
 ) -> jax.Array:
-    """``greedy_importance`` over row-sharded z (n ring-gain steps)."""
+    """``greedy_importance`` over row-sharded z.
+
+    ``lazy_budget`` threads straight through to the engine: when the set
+    function provides lazy hooks (sharded facility location does) the full
+    pass runs ``lazy_greedy`` — cached gains corrected over touched rows
+    only — instead of n ring-gain evaluations; ignored otherwise, exactly as
+    on the single-device path."""
     n = _check_shardable(z, mesh, axis)
-    run = _compiled("importance", fn, mesh, axis, n)
+    run = _compiled("importance", fn, mesh, axis, n, lazy_budget)
     return run(z, _valid_or_all(n, valid))

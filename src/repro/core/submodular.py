@@ -28,6 +28,7 @@ Functions:
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Callable, NamedTuple
 
 import jax
@@ -148,6 +149,7 @@ facility_location = SetFunction(
 # gain(j) = colsum_j - lam * (2 cur_j + K_jj)
 # ---------------------------------------------------------------------------
 
+@functools.lru_cache(maxsize=64)
 def make_graph_cut(lam: float = 0.4) -> SetFunction:
     def init(K: jax.Array) -> State:
         return {"colsum": jnp.sum(K, axis=0), "cur": jnp.zeros((K.shape[0],), K.dtype)}
@@ -246,6 +248,7 @@ disparity_min = SetFunction(
 )
 
 
+@functools.lru_cache(maxsize=64)
 def make_facility_location_pallas(*, interpret: bool = False,
                                   block_i: int = 512, block_j: int = 512) -> SetFunction:
     """Facility location with the Pallas ``fl_gains`` kernel as the gain

@@ -13,7 +13,9 @@ are still accepted (uniform weights).  Everything is a pure function of
 
 Background prefetch: a one-slot daemon thread overlaps host batch assembly
 with device compute; worker exceptions propagate to the consumer instead of
-silently truncating the epoch.
+silently truncating the epoch, and abandoning an epoch early (break /
+``close()`` on the iterator) signals the worker to stop instead of leaving
+it blocked forever on a full queue with batch arrays pinned.
 """
 from __future__ import annotations
 
@@ -121,22 +123,48 @@ class Pipeline:
             return
         q: queue.Queue = queue.Queue(maxsize=2)
         _SENTINEL = object()
+        stop = threading.Event()
+
+        def put(item) -> bool:
+            """Enqueue unless the consumer has gone away; the timeout bounds
+            how long an abandoned worker can stay blocked on a full queue."""
+            while not stop.is_set():
+                try:
+                    q.put(item, timeout=0.1)
+                    return True
+                except queue.Full:
+                    continue
+            return False
 
         def worker():
             try:
                 for b in gen():
-                    q.put(b)
+                    if not put(b):
+                        return
             except BaseException as e:  # noqa: BLE001 — re-raised in consumer
-                q.put(_WorkerError(e))
+                put(_WorkerError(e))
             else:
-                q.put(_SENTINEL)
+                put(_SENTINEL)
 
-        t = threading.Thread(target=worker, daemon=True)
+        t = threading.Thread(target=worker, daemon=True,
+                             name="pipeline-prefetch")
         t.start()
-        while True:
-            b = q.get()
-            if b is _SENTINEL:
-                break
-            if isinstance(b, _WorkerError):
-                raise b.exc
-            yield b
+        try:
+            while True:
+                b = q.get()
+                if b is _SENTINEL:
+                    break
+                if isinstance(b, _WorkerError):
+                    raise b.exc
+                yield b
+        finally:
+            # runs on normal exhaustion AND when the consumer breaks out
+            # early (generator close): release the worker and reap it so no
+            # thread is left pinning batch arrays behind a full queue
+            stop.set()
+            while True:
+                try:
+                    q.get_nowait()
+                except queue.Empty:
+                    break
+            t.join(timeout=5.0)

@@ -143,6 +143,10 @@ def fl_gains_gram_free_delta_pallas(
     """Fused lazy-greedy gain correction: both relu terms of the delta share
     one on-the-fly similarity tile (see ``ref.fl_gains_gram_free_delta_ref``).
 
+    The i (touched-rows) axis is the reduction axis, so the kernel is shard
+    agnostic on the candidate side: the sharded lazy engine calls it with
+    ``zc`` = the device-local candidate block and b unchanged.
+
     Args:
       z: (b, d) touched ground rows; zc: (n_cand, d); c_old/c_new: (b,).
       b % block_i == 0, n_cand % block_j == 0.

@@ -97,6 +97,12 @@ def fl_gains_gram_free_delta(
     Padding is exact: padded touched rows get c_old = c_new = +big so both
     relu terms vanish identically; padded candidate rows are sliced off; the
     feature dimension is zero-padded to a lane-aligned multiple of 128.
+
+    ``zc`` need not be the full ground set: the sharded lazy path
+    (``core.sharded``) passes each device's local candidate block, so one
+    call corrects an (n/ndev,)-slice of the cached gain vector per shard —
+    the reduction over ``z`` rows is unchanged, keeping per-candidate sums
+    bit-exact against the single-device call.
     """
     if not use_pallas:
         return fl_gains_gram_free_delta_ref(z, zc, c_old, c_new)

@@ -57,7 +57,9 @@ def fl_gains_gram_free_delta_ref(
     summed over the given ground rows only (``z`` holds just the rows whose
     cover moved since the gains were cached).  Rows with ``c_old = c_new =
     +inf`` contribute exact zeros — the padding contract for the engine's
-    fixed-size touched-rows buffer.
+    fixed-size touched-rows buffer.  ``zc`` may be any candidate block, not
+    only the full ground set — the sharded engine corrects each device's
+    local (n/ndev)-candidate slice with the same touched rows.
 
     Args:
       z:     (b, d) row-normalized features of the touched ground rows.

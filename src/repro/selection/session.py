@@ -85,7 +85,9 @@ class MiloSessionConfig:
     # identical to single-device, so artifacts stay portable across meshes)
     shard_selection: bool = False
     # lazy gain reuse for the WRE full-greedy pass + its full-recompute
-    # threshold (fraction of touched rows); FL hard functions only
+    # threshold (fraction of touched rows); FL hard functions only.
+    # Composes with shard_selection: mesh-routed classes run the cached-gain
+    # engine inside shard_map (see core.sharded.sharded_lazy_greedy)
     lazy_gains: bool = False
     lazy_threshold: float = 0.125
     # bucketed SGE candidate counts from the true class geometry instead of
@@ -103,6 +105,11 @@ class MiloSessionConfig:
     # downstream classifier training
     lr: float = 0.05
     hidden: int = 64
+    # classifier head width; None derives it from the train ∪ eval labels
+    # seen by each train() call (train labels alone under-size the head when
+    # a class never made it into the training split, and out-of-range eval
+    # labels gather clipped logits under jit — silently wrong metrics)
+    n_classes: int | None = None
     sub_steps: int = 4
     batch_size: int = 0          # 0 = one full-subset batch per epoch
     eval_every_epochs: int = 1
@@ -298,7 +305,9 @@ class MiloSession:
         # (same tolerance as prep_seed below).  shard_selection is recorded
         # but deliberately NOT checked: sharded runs select identically to
         # single-device up to sub-ulp near-tie resolution (see core.sharded),
-        # an accepted tolerance so artifacts stay portable across meshes.
+        # an accepted tolerance so artifacts stay portable across meshes —
+        # including lazy+sharded runs, where the trajectory-affecting knobs
+        # (lazy_gains, lazy_threshold) ARE checked and the mesh still is not.
         for knob in ("gram_free", "bucket_classes", "lazy_gains",
                      "exact_sge_candidates"):
             stored_knob = md.config.get(knob)
@@ -470,6 +479,20 @@ class MiloSession:
 
         feats = np.asarray(features, np.float32)
         labs = np.asarray(labels, np.int64)
+        # size the head over every label the run will see: a test/val class
+        # absent from the training split must still own a logit, or accuracy
+        # gathers out-of-bounds (clipped under jit → silently wrong)
+        max_label = int(max(labs.max(), np.asarray(test_y).max()))
+        if cfg.n_classes is None:
+            n_classes = max_label + 1
+        elif cfg.n_classes <= max_label:
+            raise ValueError(
+                f"n_classes={cfg.n_classes} cannot cover label {max_label} "
+                "present in the train/eval data — the override may only "
+                "widen the head, never reintroduce clipped-logit metrics"
+            )
+        else:
+            n_classes = cfg.n_classes
 
         def make_batch(idx: np.ndarray) -> dict:
             return {"x": feats[idx], "y": labs[idx]}
@@ -489,7 +512,7 @@ class MiloSession:
         steps = max(1, pipe.steps_per_epoch()) * epochs
         train_step = _classifier_step_fn(cfg.sub_steps)
         state = _init_classifier(
-            jax.random.PRNGKey(seed), feats.shape[1], int(labs.max()) + 1,
+            jax.random.PRNGKey(seed), feats.shape[1], n_classes,
             hidden, float(lr), steps,
         )
         tx, ty = jnp.asarray(test_x), jnp.asarray(test_y)

@@ -242,6 +242,32 @@ def test_pipeline_prefetch_propagates_worker_errors():
         list(pipe.epoch(0))
 
 
+def test_pipeline_prefetch_worker_exits_on_early_break():
+    """Abandoning an epoch early (break / close()) must shut the prefetch
+    worker down; before the stop event it stayed blocked forever on a full
+    queue, pinning batch arrays."""
+    import threading
+    import time
+
+    def make_batch(idx):
+        return {"x": np.ones((len(idx), 64))}
+
+    pipe = Pipeline(make_batch, _WeightedToy(), batch_size=2, seed=0,
+                    prefetch=True)
+    assert pipe.steps_per_epoch() > 3  # enough batches left to block on
+    it = pipe.epoch(0)
+    next(it)            # consume one batch...
+    it.close()          # ...then abandon the epoch (same path as `break`)
+    deadline = time.monotonic() + 5.0
+    while time.monotonic() < deadline:
+        workers = [t for t in threading.enumerate()
+                   if t.name == "pipeline-prefetch" and t.is_alive()]
+        if not workers:
+            break
+        time.sleep(0.05)
+    assert not workers, "prefetch worker still alive after epoch abandoned"
+
+
 # -- MiloSession facade -------------------------------------------------------
 
 def test_session_end_to_end(tmp_path, feats, labels):
@@ -272,6 +298,44 @@ def test_session_end_to_end(tmp_path, feats, labels):
     ))
     with pytest.raises(MetadataMismatchError):
         bad.preprocess(feats, labels)
+
+
+def test_session_head_covers_held_out_eval_classes(feats, labels, monkeypatch):
+    """A test/val label outside the train range must still own a logit:
+    sizing the head from train labels alone made accuracy gather clipped
+    (silently wrong) logits under jit.  n_classes derives from train ∪ eval
+    labels, with an explicit config override."""
+    from repro.selection import session as session_mod
+
+    sizes = []
+    orig = session_mod._init_classifier
+
+    def spy(key, d_in, n_classes, hidden, lr0, total_steps):
+        sizes.append(n_classes)
+        return orig(key, d_in, n_classes, hidden, lr0, total_steps)
+
+    monkeypatch.setattr(session_mod, "_init_classifier", spy)
+    session = MiloSession(MiloSessionConfig(
+        selector="random", subset_fraction=K / N, total_epochs=2,
+        n_sge_subsets=3))
+    tx = feats[:10]
+    ty = np.full((10,), CLASSES)  # a class the training split never saw
+    report = session.train(feats, labels, test_x=tx, test_y=ty)
+    assert sizes == [CLASSES + 1]
+    assert 0.0 <= report.final_acc <= 1.0
+    # explicit override wins over the derived value
+    session_wide = MiloSession(MiloSessionConfig(
+        selector="random", subset_fraction=K / N, total_epochs=2,
+        n_sge_subsets=3, n_classes=CLASSES + 3))
+    session_wide.train(feats, labels, test_x=tx, test_y=ty)
+    assert sizes == [CLASSES + 1, CLASSES + 3]
+    # an override narrower than the observed labels would reintroduce the
+    # clipped-gather bug — it must refuse, not silently mis-measure
+    session_narrow = MiloSession(MiloSessionConfig(
+        selector="random", subset_fraction=K / N, total_epochs=2,
+        n_sge_subsets=3, n_classes=CLASSES))
+    with pytest.raises(ValueError, match="cannot cover label"):
+        session_narrow.train(feats, labels, test_x=tx, test_y=ty)
 
 
 def test_session_trains_other_registry_selectors(feats, labels):

@@ -556,3 +556,64 @@ def test_gram_matrix_blocked_block_invariant(metric):
     a = np.asarray(gram_matrix_blocked(z, metric=metric, block=16))
     b = np.asarray(gram_matrix_blocked(z, metric=metric, block=64))
     np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# shard/jit program caches survive across preprocess() calls (satellite fix)
+# ---------------------------------------------------------------------------
+
+def test_set_function_factories_are_memoized():
+    """The engines jit with the SetFunction as a static argument, so every
+    factory must return the SAME object for the same params — fresh closures
+    per preprocess() call silently recompiled every engine every session."""
+    from repro.core import get_gram_free, make_graph_cut
+    from repro.core.gram_free import make_gram_free_graph_cut
+
+    for name in ("facility_location", "graph_cut", "disparity_sum",
+                 "disparity_min"):
+        assert get_gram_free(name) is get_gram_free(name), name
+    assert make_gram_free_facility_location(use_pallas=True, interpret=True) \
+        is make_gram_free_facility_location(use_pallas=True, interpret=True)
+    assert make_graph_cut(0.4) is make_graph_cut(0.4)
+    assert make_gram_free_graph_cut(0.3) is not make_gram_free_graph_cut(0.4)
+
+
+def test_second_preprocess_triggers_zero_new_compiles():
+    """Cache-hit regression for the stale shard-program cache bug: an
+    identical second preprocess() must reuse every compiled engine program.
+    Counted via jax.monitoring's backend-compile event."""
+    rng = np.random.default_rng(31)
+    labels = np.repeat(np.arange(4), 25)
+    feats = rng.normal(size=(100, 8)).astype(np.float32)
+
+    def run():
+        return MiloPreprocessor(
+            subset_fraction=0.1, gram_free=True, lazy_gains=True,
+            hard_fn="facility_location",
+        ).preprocess(feats, labels, jax.random.PRNGKey(0))
+
+    first = run()  # warm every jit cache
+    compiles: list[str] = []
+
+    def listener(name, duration, **kwargs):
+        if name == "/jax/core/compile/backend_compile_duration":
+            compiles.append(name)
+
+    from jax._src import monitoring as _monitoring
+
+    # private helper in the pinned jax; fall back to clearing every listener
+    # (fine inside a test) rather than leaving ours registered forever if a
+    # jax upgrade reorganizes the monitoring internals
+    unregister = getattr(
+        _monitoring, "_unregister_event_duration_listener_by_callback", None)
+    jax.monitoring.register_event_duration_secs_listener(listener)
+    try:
+        second = run()
+    finally:
+        if unregister is not None:
+            unregister(listener)
+        else:  # pragma: no cover
+            jax.monitoring.clear_event_listeners()
+    assert compiles == [], f"second preprocess() recompiled {len(compiles)} programs"
+    np.testing.assert_array_equal(first.sge_subsets, second.sge_subsets)
+    np.testing.assert_array_equal(first.wre_importance, second.wre_importance)

@@ -163,6 +163,158 @@ def test_sharded_greedy_importance_facility_location():
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5)
 
 
+# ---------------------------------------------------------------------------
+# sharded lazy gains (ISSUE 4 tentpole)
+# ---------------------------------------------------------------------------
+
+@multi_device
+@pytest.mark.parametrize("n,seed,masked", [(256, 0, False), (256, 1, False),
+                                           (128, 3, False), (128, 4, True)])
+def test_sharded_lazy_greedy_matches_single_device_lazy(n, seed, masked):
+    """Shortlist-horizon lazy runs: indices bit-identical, gains within the
+    documented ≤1 ulp (the ring psum reassociates the cached base gains; the
+    delta corrections themselves are bit-exact), and the traced
+    rows-evaluated counter identical — the delta path really ran under
+    shard_map (a silent eager fallback would charge n rows every step)."""
+    from repro.core import (
+        get_gram_free,
+        lazy_greedy,
+        make_sharded_gram_free,
+        sharded_lazy_greedy,
+    )
+
+    z = _fixture(n, seed=seed)
+    valid = None
+    if masked:
+        n_live = n - n // 4
+        z = z.at[n_live:].set(0.0)
+        valid = jnp.arange(n) < n_live
+    k, budget = n // 4, n // 8
+    fn1 = get_gram_free("facility_location")
+    fns = make_sharded_gram_free("facility_location", n_shards=8)
+    a = lazy_greedy(fn1, z, k, budget=budget, valid=valid)
+    b = sharded_lazy_greedy(fns, z, k, budget=budget, mesh=_mesh(),
+                            valid=valid)
+    np.testing.assert_array_equal(np.asarray(a.indices), np.asarray(b.indices))
+    np.testing.assert_allclose(np.asarray(a.gains), np.asarray(b.gains),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(a.rows_evaluated),
+                                  np.asarray(b.rows_evaluated))
+    # at least one step must have taken the lazy path for this to prove
+    # anything; budget = n/8 guarantees it on these fixtures
+    assert (np.asarray(b.rows_evaluated) == budget).any()
+
+
+@multi_device
+def test_sharded_lazy_importance_full_run_matches():
+    """The composed WRE pass (sharded_greedy_importance(lazy_budget=...)):
+    full exhaustive run over the ground set, importance equal to the
+    single-device lazy pass to float-rounding ulps on the fixture (near-tie
+    caveat documented in greedy.lazy_greedy applies only past the fixture's
+    argmax gaps)."""
+    from repro.core import (
+        get_gram_free,
+        greedy_importance,
+        make_sharded_gram_free,
+        sharded_greedy_importance,
+    )
+
+    z = _fixture(128, seed=3)
+    fn1 = get_gram_free("facility_location")
+    fns = make_sharded_gram_free("facility_location", n_shards=8)
+    a = greedy_importance(fn1, z, lazy_budget=16)
+    b = sharded_greedy_importance(fns, z, mesh=_mesh(), lazy_budget=16)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-5, atol=1e-5)
+    assert (np.asarray(a) == 0.0).tolist() == (np.asarray(b) == 0.0).tolist()
+
+
+@multi_device
+def test_ring_schedule_issues_exactly_n_shards_minus_one_hops():
+    """The over-rotation fix (ROADMAP PR-3 follow-up): the first ring block
+    is the shard's own z_local, so a full-gains evaluation must contain
+    exactly n_shards - 1 ppermute eqns — statically countable now that the
+    schedule is unrolled over the static shard count — and stay bit-exact
+    against the psum-combined reference reduction."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core import get_gram_free, make_sharded_gram_free
+
+    z = _fixture(256, seed=5)
+    mesh = _mesh()
+    fns = make_sharded_gram_free("facility_location", n_shards=8)
+
+    def full_gains(zs):
+        return fns.gains(fns.init(zs), zs)
+
+    run = shard_map(full_gains, mesh=mesh, in_specs=P("sel", None),
+                    out_specs=P(None), check_rep=False)
+    jaxpr = str(jax.make_jaxpr(run)(z))
+    assert jaxpr.count("ppermute") == 7
+    fn1 = get_gram_free("facility_location")
+    np.testing.assert_allclose(np.asarray(jax.jit(run)(z)),
+                               np.asarray(fn1.gains(fn1.init(z), z)),
+                               rtol=1e-6, atol=1e-6)
+
+
+@multi_device
+def test_preprocessor_lazy_plus_sharded_composes():
+    """MiloPreprocessor(lazy_gains=True, shard_selection=True) routes large
+    classes through the sharded lazy engine (no silent eager fallback) and
+    reproduces the single-device lazy artifact: SGE bank bit-identical,
+    WRE importance within reduction-order ulps."""
+    from repro.core import MiloPreprocessor
+    from repro.core import sharded as sharded_mod
+
+    rng = np.random.default_rng(14)
+    sizes = [97, 83, 70, 45, 5]  # buckets 128/128/128/64/8 + a tiny class
+    labels = np.concatenate([np.full(s, i) for i, s in enumerate(sizes)])
+    feats = rng.normal(size=(len(labels), 12)).astype(np.float32)
+    key = jax.random.PRNGKey(0)
+    kw = dict(subset_fraction=0.1, gram_free=True, lazy_gains=True,
+              hard_fn="facility_location")
+    base = MiloPreprocessor(**kw).preprocess(feats, labels, key)
+
+    seen_budgets = []
+    orig = sharded_mod.sharded_greedy_importance
+
+    def spy(fn, z, **kwargs):
+        seen_budgets.append(kwargs.get("lazy_budget"))
+        return orig(fn, z, **kwargs)
+
+    sharded_mod.sharded_greedy_importance = spy
+    try:
+        shard = MiloPreprocessor(**kw, shard_selection=True).preprocess(
+            feats, labels, key)
+    finally:
+        sharded_mod.sharded_greedy_importance = orig
+    # every mesh-routed class carried a real touched-rows budget
+    assert seen_budgets and all(b is not None for b in seen_budgets)
+    np.testing.assert_array_equal(base.sge_subsets, shard.sge_subsets)
+    np.testing.assert_allclose(base.wre_importance, shard.wre_importance,
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(base.wre_probs, shard.wre_probs,
+                               rtol=1e-5, atol=1e-7)
+    assert shard.config["shard_selection"] is True
+    assert shard.config["lazy_gains"] is True
+
+
+@multi_device
+def test_sharded_factories_are_memoized():
+    """Two sessions with the same knobs must receive the SAME SetFunction
+    objects, or every jit/shard-program cache keys on fresh closures and
+    recompiles per session (the stale shard-program cache bug)."""
+    from repro.core import make_sharded_gram_free
+
+    for name in ("facility_location", "graph_cut", "disparity_sum",
+                 "disparity_min"):
+        assert make_sharded_gram_free(name, n_shards=8) is \
+            make_sharded_gram_free(name, n_shards=8), name
+    assert make_sharded_gram_free("graph_cut", n_shards=8) is not \
+        make_sharded_gram_free("graph_cut", n_shards=4)
+
+
 @multi_device
 def test_sharded_valid_mask_never_selects_padding():
     from repro.core import make_sharded_gram_free, sharded_sge
