@@ -261,6 +261,35 @@ def _bench_sharded(rows: list[str], verbose: bool, fast: bool) -> None:
     if verbose:
         print(rows[-1])
 
+    # Two-level gather budget (ISSUE 5 satellite): each lazy step gathers —
+    # and psums across the mesh — only the smallest pow2 level covering the
+    # rows that actually moved, instead of the full budget-sized block.
+    # Trajectories are bit-identical; the payload counter (rows_evaluated
+    # records the level gathered) is the psum-reduction evidence.
+    res2 = None
+
+    def run_lazy_two_level():
+        nonlocal res2
+        res2 = sharded_lazy_greedy(fl8, zl, n_lz, budget=budget, mesh=mesh,
+                                   two_level=True)
+        jax.block_until_ready(res2.rows_evaluated)
+
+    t_lz2 = _timeit(run_lazy_two_level, reps=1)
+    rows2 = np.asarray(res2.rows_evaluated)
+    lazy1 = rows_eval[rows_eval < n_lz]
+    lazy2 = rows2[rows2 < n_lz]
+    payload_red = lazy1.sum() / max(lazy2.sum(), 1)
+    identical = bool(np.array_equal(np.asarray(res.indices),
+                                    np.asarray(res2.indices)))
+    rows.append(csv_row(
+        f"preprocess/importance_fl_lazy2_sharded_n{n_lz}_dev{ndev}",
+        t_lz2 * 1e6,
+        f"budget={budget} psum_payload_reduction={payload_red:.1f}x "
+        f"mean_gather_rows={lazy2.mean():.1f} (single-level={budget}) "
+        f"indices_identical={identical}"))
+    if verbose:
+        print(rows[-1])
+
 
 def run(verbose: bool = True) -> list[str]:
     fast = os.environ.get("BENCH_FAST") == "1"

@@ -1,11 +1,14 @@
 """Benchmark master: one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows and merges every measured row
-into ``BENCH_selection.json`` (override the path with ``BENCH_JSON``;
-``BENCH_JSON=0`` disables the write) so the perf trajectory is
-machine-readable across PRs, not just printed.  Set ``BENCH_FAST=1`` to run
-a reduced subset (CI smoke); pass module names as argv to run a subset,
-e.g. ``python -m benchmarks.run preprocess kernels``.
+into a tracked JSON trajectory file so the perf trajectory is
+machine-readable across PRs, not just printed: ``bench_training``'s rows
+land in ``BENCH_training.json`` (the training/tuning hot-path trajectory),
+everything else in ``BENCH_selection.json``.  Override the paths with
+``BENCH_TRAINING_JSON`` / ``BENCH_JSON``; ``BENCH_JSON=0`` disables ALL
+writes.  Set ``BENCH_FAST=1`` to run a reduced subset (CI smoke); pass
+module names as argv to run a subset, e.g.
+``python -m benchmarks.run preprocess kernels``.
 
   bench_set_functions  — Fig. 4 (set-function composition)
   bench_exploration    — Fig. 5 (SGE vs WRE vs curriculum)
@@ -24,6 +27,7 @@ import sys
 import time
 
 DEFAULT_JSON_PATH = "BENCH_selection.json"
+DEFAULT_TRAINING_JSON_PATH = "BENCH_training.json"
 
 
 def parse_row(row: str) -> tuple[str, dict] | None:
@@ -40,7 +44,7 @@ def parse_row(row: str) -> tuple[str, dict] | None:
         return None
 
 
-def write_json(rows: list[str], path: str) -> None:
+def write_json(rows: list[str], path: str, *, fmt: str = "bench-selection") -> None:
     """Merge measured rows into the JSON trajectory file keyed by benchmark
     name, so partial runs (module subsets, BENCH_FAST) refresh their own
     entries without clobbering the rest.  Each record carries backend/fast
@@ -60,7 +64,7 @@ def write_json(rows: list[str], path: str) -> None:
     else:
         shard_axis = None
     fast = os.environ.get("BENCH_FAST") == "1"
-    doc: dict = {"format": "bench-selection", "version": 1, "benchmarks": {}}
+    doc: dict = {"format": fmt, "version": 1, "benchmarks": {}}
     if os.path.exists(path):
         try:
             with open(path) as f:
@@ -104,17 +108,18 @@ def main(argv: list[str] | None = None) -> None:
 
     argv = sys.argv[1:] if argv is None else argv
     fast = os.environ.get("BENCH_FAST") == "1"
+    # third field: which tracked trajectory file the module's rows merge into
     modules = [
-        ("set_functions", bench_set_functions),
-        ("exploration", bench_exploration),
-        ("training", bench_training),
-        ("tuning", bench_tuning),
-        ("ablations", bench_ablations),
-        ("preprocess", bench_preprocess),
-        ("kernels", bench_kernels),
+        ("set_functions", bench_set_functions, "selection"),
+        ("exploration", bench_exploration, "selection"),
+        ("training", bench_training, "training"),
+        ("tuning", bench_tuning, "selection"),
+        ("ablations", bench_ablations, "selection"),
+        ("preprocess", bench_preprocess, "selection"),
+        ("kernels", bench_kernels, "selection"),
     ]
     if argv:
-        known = {name for name, _ in modules}
+        known = {name for name, _, _ in modules}
         unknown = [a for a in argv if a not in known]
         if unknown:
             raise SystemExit(f"unknown benchmark modules {unknown}; available: {sorted(known)}")
@@ -125,12 +130,12 @@ def main(argv: list[str] | None = None) -> None:
     print("name,us_per_call,derived")
     t0 = time.time()
     failures = 0
-    all_rows: list[str] = []
-    for name, mod in modules:
+    rows_by_target: dict[str, list[str]] = {"selection": [], "training": []}
+    for name, mod, target in modules:
         t1 = time.time()
         try:
             rows = mod.run(verbose=False)
-            all_rows.extend(rows)
+            rows_by_target[target].extend(rows)
             for r in rows:
                 print(r, flush=True)
             print(f"# {name} done in {time.time()-t1:.1f}s", flush=True)
@@ -138,9 +143,16 @@ def main(argv: list[str] | None = None) -> None:
             failures += 1
             print(f"# {name} FAILED: {type(e).__name__}: {e}", flush=True)
     json_path = os.environ.get("BENCH_JSON", DEFAULT_JSON_PATH)
-    if all_rows and json_path != "0":
-        write_json(all_rows, json_path)
-        print(f"# wrote {json_path}")
+    training_path = os.environ.get("BENCH_TRAINING_JSON",
+                                   DEFAULT_TRAINING_JSON_PATH)
+    if json_path != "0":
+        if rows_by_target["selection"]:
+            write_json(rows_by_target["selection"], json_path)
+            print(f"# wrote {json_path}")
+        if rows_by_target["training"] and training_path != "0":
+            write_json(rows_by_target["training"], training_path,
+                       fmt="bench-training")
+            print(f"# wrote {training_path}")
     print(f"# total {time.time()-t0:.1f}s, failures={failures}")
     sys.exit(1 if failures else 0)
 

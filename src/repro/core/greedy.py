@@ -145,7 +145,20 @@ def greedy(
     return GreedyResult(idxs, gs)
 
 
-@functools.partial(jax.jit, static_argnames=("fn", "k", "budget", "n"))
+def _gather_levels(budget: int) -> tuple[int, ...]:
+    """Two-level gather sizes: powers of two up to ``budget`` (inclusive as
+    the top level).  A lazy step gathers only the smallest level covering its
+    touched-row count instead of the full budget-sized block."""
+    levels = []
+    size = 1
+    while size < budget:
+        levels.append(size)
+        size <<= 1
+    return tuple(levels) + (budget,)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("fn", "k", "budget", "n", "two_level"))
 def lazy_greedy(
     fn: SetFunction,
     K: jax.Array,
@@ -154,6 +167,7 @@ def lazy_greedy(
     budget: int,
     valid: jax.Array | None = None,
     n: int | None = None,
+    two_level: bool = False,
 ) -> LazyGreedyResult:
     """Exact greedy with lazy gain reuse (``SetFunction.lazy`` hooks).
 
@@ -180,6 +194,17 @@ def lazy_greedy(
     drift resolves those near-ties differently: a different but equally
     valid greedy order whose gain *sequence* still matches to ulps.  Full
     recomputes (budget overflows) reset the drift.
+
+    ``two_level=True`` right-sizes the lazy gather: instead of always
+    contracting a ``budget``-sized touched-row block, the step switches to
+    the smallest power-of-two level covering the rows that actually moved
+    (``lax.switch`` over the ~log2(budget) pre-compiled level variants).
+    Results are BIT-IDENTICAL to the single-level path — surplus slots carry
+    an infinite cover, so their delta terms are exact zeros and shrinking
+    the block only removes exact-zero additions — but the per-step payload
+    (and, under ``shard_map``, the cross-device psum of the gathered block)
+    drops to the touched count on calm steps.  ``rows_evaluated`` records
+    the level actually gathered.
     """
     if fn.lazy is None:
         raise ValueError(
@@ -206,20 +231,41 @@ def lazy_greedy(
         touched = c_new > c_old
         m = jnp.sum(touched.astype(jnp.int32))
 
-        def lazy_path(g):
-            # top-k on the 0/1 mask yields the touched row indices (all of
-            # them when m <= budget); surplus slots land on untouched rows
-            # and are neutralized with an infinite cover (delta contributes
-            # exact zeros), so the correction is exact.
-            _, rows_idx = jax.lax.top_k(jnp.where(touched, 1.0, 0.0), budget)
-            real = touched[rows_idx]
-            c_o = jnp.where(real, c_old[rows_idx], jnp.inf)
-            c_n = jnp.where(real, c_new[rows_idx], jnp.inf)
-            delta = lz.delta_gains(K, rows_idx, c_o, c_n)
-            return g + delta, jnp.asarray(budget, jnp.int32)
+        def delta_at(size: int):
+            """Lazy correction gathering a ``size``-row touched block.
+
+            top-k on the 0/1 mask yields the touched row indices (all of
+            them when m <= size); surplus slots land on untouched rows
+            and are neutralized with an infinite cover (delta contributes
+            exact zeros), so the correction is exact at every level.
+            """
+
+            def path(g):
+                _, rows_idx = jax.lax.top_k(jnp.where(touched, 1.0, 0.0), size)
+                real = touched[rows_idx]
+                c_o = jnp.where(real, c_old[rows_idx], jnp.inf)
+                c_n = jnp.where(real, c_new[rows_idx], jnp.inf)
+                delta = lz.delta_gains(K, rows_idx, c_o, c_n)
+                return g + delta, jnp.asarray(size, jnp.int32)
+
+            return path
 
         def full_path(g):
             return fn.gains(state, K), jnp.asarray(n, jnp.int32)
+
+        if two_level:
+            levels = _gather_levels(budget)
+            sizes = jnp.asarray(levels, jnp.int32)
+
+            def lazy_path(g):
+                lvl = jnp.searchsorted(sizes, m.astype(jnp.int32))
+                return jax.lax.switch(
+                    jnp.minimum(lvl, len(levels) - 1),
+                    [delta_at(s) for s in levels], g,
+                )
+
+        else:
+            lazy_path = delta_at(budget)
 
         g, used = jax.lax.cond(m <= budget, lazy_path, full_path, g)
         return (
@@ -383,7 +429,8 @@ def sge(
     return jnp.stack(runs, axis=0)
 
 
-@functools.partial(jax.jit, static_argnames=("fn", "n", "lazy_budget"))
+@functools.partial(jax.jit,
+                   static_argnames=("fn", "n", "lazy_budget", "lazy_two_level"))
 def greedy_importance(
     fn: SetFunction,
     K: jax.Array,
@@ -391,6 +438,7 @@ def greedy_importance(
     valid: jax.Array | None = None,
     n: int | None = None,
     lazy_budget: int | None = None,
+    lazy_two_level: bool = False,
 ) -> jax.Array:
     """Paper Alg. 3: full greedy over the whole ground set.
 
@@ -405,10 +453,13 @@ def greedy_importance(
 
     ``lazy_budget`` routes the pass through ``lazy_greedy`` when the set
     function provides lazy hooks (facility location does); ignored otherwise.
+    ``lazy_two_level`` right-sizes each lazy gather to the smallest pow2
+    level covering the touched rows (bit-identical; see ``lazy_greedy``).
     """
     n_ = K.shape[0] if n is None else n
     if lazy_budget is not None and fn.lazy is not None:
-        res = lazy_greedy(fn, K, n_, budget=lazy_budget, valid=valid, n=n_)
+        res = lazy_greedy(fn, K, n_, budget=lazy_budget, valid=valid, n=n_,
+                          two_level=lazy_two_level)
     else:
         res = greedy(fn, K, n_, valid=valid, n=n_)
     g = jnp.full((n_,), _NEG, jnp.float32)

@@ -20,7 +20,7 @@ protocol, and ``MiloSession`` drives preprocess/train/tune end to end.  The
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+from typing import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -97,6 +97,11 @@ class MiloPreprocessor:
     # greedy order.
     lazy_gains: bool = False
     lazy_threshold: float = 0.125
+    # Right-size each lazy gather to the smallest pow2 level covering the
+    # touched rows instead of the full budget-sized block (bit-identical
+    # trajectories; on the sharded path this shrinks the per-step psum
+    # payload on calm steps at the cost of ~log2(budget) compiled variants).
+    lazy_two_level: bool = False
     # Bucketed SGE draws its per-step candidate count s from the PADDED
     # problem geometry by default (one compile per bucket, documented
     # approximation).  True derives s from the class's true (n_c, k_c) —
@@ -143,6 +148,173 @@ class MiloPreprocessor:
             return submodular.make_graph_cut(self.graph_cut_lambda)
         return submodular.get(name)
 
+    def _class_selection(
+        self,
+        feats_c: np.ndarray,
+        k_c: int,
+        k_sge: jax.Array,
+        *,
+        bucket: bool,
+        mesh,
+        easy: submodular.SetFunction,
+        hard: submodular.SetFunction,
+        easy_sh: submodular.SetFunction | None,
+        hard_sh: submodular.SetFunction | None,
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """SGE bank + WRE importance for one class partition.
+
+        ``feats_c`` is the class's (n_c, d) feature slice; returns the
+        ``(n_sge_subsets, k_c)`` local-index bank and the (n_c,) importance
+        vector.  ``warmup`` replays this exact path on dummy features, so
+        every engine/transform program it compiles is the one preprocess
+        will hit.
+        """
+        n_c = len(feats_c)
+        z = jnp.asarray(feats_c)
+        if self.gram_free:
+            # the "kernel" threaded through the greedy engines is the
+            # row-normalized feature matrix itself: O(n·d), no Gram
+            A = normalize_rows(z.astype(jnp.float32))
+        else:
+            A = gram_matrix_blocked(
+                z, metric=self.metric, block=self.gram_block,
+                use_pallas=self.use_pallas,
+            )
+        valid = None
+        k_run = k_c
+        n_run = n_c
+        if bucket:
+            # Pad the problem (ground set AND budget) to the next
+            # power of two: the jit cache then keys on O(log²)
+            # distinct (bucket, k_run) pairs instead of every class
+            # size.  Masking is exact — padded elements start
+            # pre-selected and padded rows contribute nothing (zero
+            # Gram rows / +inf FL cover) — so DETERMINISTIC runs
+            # (full greedy -> WRE importance) match the unpadded run
+            # bit-for-bit.  The STOCHASTIC SGE draws use the padded
+            # candidate geometry (s and the per-step key split come
+            # from n_pad/k_run), so for a fixed seed the bank differs
+            # from an unbucketed run — a different but equally valid
+            # stochastic-greedy sample (see ROADMAP perf follow-ups).
+            n_pad = _next_pow2(n_c)
+            k_run = min(n_pad, _next_pow2(k_c))
+            if n_pad > n_c:
+                pad = ((0, n_pad - n_c), (0, 0)) if self.gram_free else (
+                    (0, n_pad - n_c), (0, n_pad - n_c))
+                A = jnp.pad(A, pad)
+            valid = jnp.arange(n_pad) < n_c
+            n_run = n_pad
+        # exact_sge_candidates: derive the stochastic-greedy draw
+        # size from the class's true geometry instead of the padded
+        # bucket's (identical when unbucketed)
+        s_sge = (
+            stochastic_candidate_count(n_c, k_c, self.eps)
+            if self.exact_sge_candidates else None
+        )
+        # The sharded path needs the (padded) row count to divide the
+        # mesh; pow2 buckets always do on a pow2 mesh, tiny/odd
+        # classes fall back to the trajectory-identical local path.
+        from repro.core import sharded as sharded_mod
+
+        shard_ok = mesh is not None and n_run % mesh.size == 0
+        if shard_ok:
+            subs = sharded_mod.sharded_sge(
+                easy_sh, A, k_run, k_sge, n_subsets=self.n_sge_subsets,
+                eps=self.eps, s=s_sge, mesh=mesh, valid=valid,
+            )
+        else:
+            subs = run_sge(
+                easy, A, k_run, k_sge, n_subsets=self.n_sge_subsets,
+                eps=self.eps, vmapped=self.sge_vmapped, valid=valid,
+                s=s_sge,
+            )
+        if shard_ok:
+            # lazy + sharded compose: the mesh classes run the same
+            # cached-gain engine inside shard_map instead of silently
+            # falling back to eager ring gains
+            imp_full = sharded_mod.sharded_greedy_importance(
+                hard_sh, A, mesh=mesh, valid=valid,
+                lazy_budget=self._lazy_budget(n_run, hard_sh),
+                lazy_two_level=self.lazy_two_level,
+            )
+        else:
+            imp_full = greedy_importance(
+                hard, A, valid=valid,
+                lazy_budget=self._lazy_budget(n_run, hard),
+                lazy_two_level=self.lazy_two_level,
+            )
+        subs_c = np.asarray(subs, np.int64)[:, :k_c]
+        imp = np.asarray(imp_full, np.float32)[:n_c]
+        return subs_c, imp
+
+    def _selection_mesh(self):
+        """(mesh, easy_sh, hard_sh) when shard_selection routes to a real
+        multi-device mesh; (None, None, None) otherwise."""
+        if not self.shard_selection:
+            return None, None, None
+        if not self.gram_free:
+            raise ValueError(
+                "shard_selection=True requires gram_free=True: only the "
+                "feature-matrix row axis is shardable (a materialized "
+                "Gram couples both axes)"
+            )
+        from repro.core import sharded as sharded_mod
+        from repro.distributed.sharding import selection_mesh
+
+        sel_mesh = selection_mesh(axis=sharded_mod.AXIS)
+        if sel_mesh.shape[sharded_mod.AXIS] <= 1:
+            return None, None, None
+        return (
+            sel_mesh,
+            self._sharded_set_fn(self.easy_fn, sel_mesh),
+            self._sharded_set_fn(self.hard_fn, sel_mesh),
+        )
+
+    def warmup(
+        self,
+        buckets: Sequence[tuple[int, int]],
+        d: int,
+        *,
+        key: jax.Array | None = None,
+    ) -> int:
+        """Pre-compile the engine programs for the given class geometries.
+
+        ``buckets`` holds the true per-class ``(n_c, k_c)`` shapes an
+        upcoming ``preprocess`` will see (e.g. ``[(5000, 500)] * 10`` for a
+        balanced 10-class dataset); ``d`` is the feature dimension (float32,
+        the dtype preprocess casts to).  Each distinct pair replays the full
+        per-class selection path — bucketing, masking, engine routing,
+        Taylor-softmax — on dummy features, so the jitted programs (keyed on
+        the factory-memoized set functions plus shapes) are compiled before
+        any real data arrives and the subsequent ``preprocess()`` triggers
+        zero backend compiles.  Returns the number of class geometries run;
+        outputs are discarded.
+        """
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        bucket_list = [(int(n_c), int(k_c)) for n_c, k_c in buckets]
+        # mirror preprocess: bucketing only deduplicates across >1 partition
+        bucket = self.bucket_classes and len(bucket_list) > 1
+        easy = self._set_fn(self.easy_fn)
+        hard = self._set_fn(self.hard_fn)
+        mesh, easy_sh, hard_sh = self._selection_mesh()
+        rng = np.random.default_rng(0)
+        seen: set[tuple[int, int]] = set()
+        for n_c, k_c in bucket_list:
+            if k_c <= 0 or (n_c, k_c) in seen:
+                continue
+            seen.add((n_c, k_c))
+            key, k_sge = jax.random.split(key)
+            dummy = rng.normal(size=(n_c, d)).astype(np.float32)
+            _, imp = self._class_selection(
+                dummy, k_c, k_sge, bucket=bucket, mesh=mesh,
+                easy=easy, hard=hard, easy_sh=easy_sh, hard_sh=hard_sh,
+            )
+            # preprocess follows every class selection with a within-class
+            # Taylor-softmax on the (n_c,)-shaped importance — warm it too
+            jax.block_until_ready(taylor_softmax(jnp.asarray(imp)))
+        return len(seen)
+
     def preprocess(
         self,
         features: np.ndarray,
@@ -178,22 +350,7 @@ class MiloPreprocessor:
         # with a single partition there is exactly one shape, so padding
         # would only inflate the problem (up to 4x Gram memory, 2x steps).
         bucket = self.bucket_classes and len(parts) > 1
-        mesh = easy_sh = hard_sh = None
-        if self.shard_selection:
-            if not self.gram_free:
-                raise ValueError(
-                    "shard_selection=True requires gram_free=True: only the "
-                    "feature-matrix row axis is shardable (a materialized "
-                    "Gram couples both axes)"
-                )
-            from repro.core import sharded as sharded_mod
-            from repro.distributed.sharding import selection_mesh
-
-            sel_mesh = selection_mesh(axis=sharded_mod.AXIS)
-            if sel_mesh.shape[sharded_mod.AXIS] > 1:
-                mesh = sel_mesh
-                easy_sh = self._sharded_set_fn(self.easy_fn, mesh)
-                hard_sh = self._sharded_set_fn(self.hard_fn, mesh)
+        mesh, easy_sh, hard_sh = self._selection_mesh()
 
         per_class_sge: list[np.ndarray] = []  # each (n_subsets, k_c) local idx
         wre_probs = np.zeros((m,), np.float32)
@@ -206,77 +363,12 @@ class MiloPreprocessor:
                 per_class_sge.append(np.zeros((self.n_sge_subsets, 0), np.int64))
                 imp = np.zeros((n_c,), np.float32)
             else:
-                z = jnp.asarray(features[part.indices])
-                if self.gram_free:
-                    # the "kernel" threaded through the greedy engines is the
-                    # row-normalized feature matrix itself: O(n·d), no Gram
-                    A = normalize_rows(z.astype(jnp.float32))
-                else:
-                    A = gram_matrix_blocked(
-                        z, metric=self.metric, block=self.gram_block,
-                        use_pallas=self.use_pallas,
-                    )
-                valid = None
-                k_run = k_c
-                n_run = n_c
-                if bucket:
-                    # Pad the problem (ground set AND budget) to the next
-                    # power of two: the jit cache then keys on O(log²)
-                    # distinct (bucket, k_run) pairs instead of every class
-                    # size.  Masking is exact — padded elements start
-                    # pre-selected and padded rows contribute nothing (zero
-                    # Gram rows / +inf FL cover) — so DETERMINISTIC runs
-                    # (full greedy -> WRE importance) match the unpadded run
-                    # bit-for-bit.  The STOCHASTIC SGE draws use the padded
-                    # candidate geometry (s and the per-step key split come
-                    # from n_pad/k_run), so for a fixed seed the bank differs
-                    # from an unbucketed run — a different but equally valid
-                    # stochastic-greedy sample (see ROADMAP perf follow-ups).
-                    n_pad = _next_pow2(n_c)
-                    k_run = min(n_pad, _next_pow2(k_c))
-                    if n_pad > n_c:
-                        pad = ((0, n_pad - n_c), (0, 0)) if self.gram_free else (
-                            (0, n_pad - n_c), (0, n_pad - n_c))
-                        A = jnp.pad(A, pad)
-                    valid = jnp.arange(n_pad) < n_c
-                    n_run = n_pad
-                # exact_sge_candidates: derive the stochastic-greedy draw
-                # size from the class's true geometry instead of the padded
-                # bucket's (identical when unbucketed)
-                s_sge = (
-                    stochastic_candidate_count(n_c, k_c, self.eps)
-                    if self.exact_sge_candidates else None
+                subs_c, imp = self._class_selection(
+                    features[part.indices], k_c, k_sge, bucket=bucket,
+                    mesh=mesh, easy=easy, hard=hard,
+                    easy_sh=easy_sh, hard_sh=hard_sh,
                 )
-                # The sharded path needs the (padded) row count to divide the
-                # mesh; pow2 buckets always do on a pow2 mesh, tiny/odd
-                # classes fall back to the trajectory-identical local path.
-                shard_ok = mesh is not None and n_run % mesh.size == 0
-                if shard_ok:
-                    subs = sharded_mod.sharded_sge(
-                        easy_sh, A, k_run, k_sge, n_subsets=self.n_sge_subsets,
-                        eps=self.eps, s=s_sge, mesh=mesh, valid=valid,
-                    )
-                else:
-                    subs = run_sge(
-                        easy, A, k_run, k_sge, n_subsets=self.n_sge_subsets,
-                        eps=self.eps, vmapped=self.sge_vmapped, valid=valid,
-                        s=s_sge,
-                    )
-                per_class_sge.append(np.asarray(subs, np.int64)[:, :k_c])
-                if shard_ok:
-                    # lazy + sharded compose: the mesh classes run the same
-                    # cached-gain engine inside shard_map instead of silently
-                    # falling back to eager ring gains
-                    imp_full = sharded_mod.sharded_greedy_importance(
-                        hard_sh, A, mesh=mesh, valid=valid,
-                        lazy_budget=self._lazy_budget(n_run, hard_sh),
-                    )
-                else:
-                    imp_full = greedy_importance(
-                        hard, A, valid=valid,
-                        lazy_budget=self._lazy_budget(n_run, hard),
-                    )
-                imp = np.asarray(imp_full, np.float32)[:n_c]
+                per_class_sge.append(subs_c)
             wre_importance[part.indices] = imp
             # Within-class Taylor-softmax, weighted by class mass so the global
             # vector is a proper distribution with stratified expectation.
@@ -314,6 +406,10 @@ class MiloPreprocessor:
                 # sharded and single-device runs select identically
                 lazy_gains=self.lazy_gains,
                 lazy_threshold=self.lazy_threshold,
+                # provenance only, like shard_selection: two-level gathers
+                # are bit-identical to single-level, so artifacts stay
+                # portable across the knob
+                lazy_two_level=self.lazy_two_level,
                 exact_sge_candidates=self.exact_sge_candidates,
                 shard_selection=self.shard_selection,
                 encoder_id=encoder_id,

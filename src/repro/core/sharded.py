@@ -358,10 +358,11 @@ def _compiled(kind: str, fn: SetFunction, mesh: Mesh, axis: str, n: int,
             return greedy(fn, zs, k, valid=v, n=n)
 
     elif kind == "lazy":
-        k, budget = extra
+        k, budget, two_level = extra
 
         def inner(zs, v):
-            return lazy_greedy(fn, zs, k, budget=budget, valid=v, n=n)
+            return lazy_greedy(fn, zs, k, budget=budget, valid=v, n=n,
+                               two_level=two_level)
 
     elif kind == "stochastic":
         k, s = extra
@@ -380,11 +381,12 @@ def _compiled(kind: str, fn: SetFunction, mesh: Mesh, axis: str, n: int,
 
         specs["in_specs"] = (P(axis, None), P(None), P(None))
     elif kind == "importance":
-        (lazy_budget,) = extra
+        lazy_budget, lazy_two_level = extra
 
         def inner(zs, v):
             return greedy_importance(fn, zs, valid=v, n=n,
-                                     lazy_budget=lazy_budget)
+                                     lazy_budget=lazy_budget,
+                                     lazy_two_level=lazy_two_level)
 
     else:  # pragma: no cover
         raise ValueError(kind)
@@ -411,6 +413,7 @@ def sharded_greedy(
 def sharded_lazy_greedy(
     fn: SetFunction, z: jax.Array, k: int, *, budget: int, mesh: Mesh,
     axis: str = AXIS, valid: jax.Array | None = None,
+    two_level: bool = False,
 ) -> LazyGreedyResult:
     """``lazy_greedy`` with z row-sharded over ``mesh``.
 
@@ -424,9 +427,15 @@ def sharded_lazy_greedy(
 
     Trajectories match the single-device ``lazy_greedy`` wherever argmax gaps
     exceed the ring psum's ~1 ulp reassociation noise — on the test fixtures
-    that is every step (indices bit-identical, gains ≤ 1 ulp)."""
+    that is every step (indices bit-identical, gains ≤ 1 ulp).
+
+    ``two_level=True`` right-sizes each lazy gather to the smallest pow2
+    level covering the touched rows (bit-identical to single-level; see
+    ``greedy.lazy_greedy``) — here that shrinks the one-owner psum payload
+    of the gathered touched-row block from ``budget × d`` to ``level × d``
+    on calm steps."""
     n = _check_shardable(z, mesh, axis)
-    run = _compiled("lazy", fn, mesh, axis, n, k, budget)
+    run = _compiled("lazy", fn, mesh, axis, n, k, budget, two_level)
     return LazyGreedyResult(*run(z, _valid_or_all(n, valid)))
 
 
@@ -459,6 +468,7 @@ def sharded_sge(
 def sharded_greedy_importance(
     fn: SetFunction, z: jax.Array, *, mesh: Mesh, axis: str = AXIS,
     valid: jax.Array | None = None, lazy_budget: int | None = None,
+    lazy_two_level: bool = False,
 ) -> jax.Array:
     """``greedy_importance`` over row-sharded z.
 
@@ -466,7 +476,9 @@ def sharded_greedy_importance(
     function provides lazy hooks (sharded facility location does) the full
     pass runs ``lazy_greedy`` — cached gains corrected over touched rows
     only — instead of n ring-gain evaluations; ignored otherwise, exactly as
-    on the single-device path."""
+    on the single-device path.  ``lazy_two_level`` right-sizes each lazy
+    gather's psum payload (bit-identical; see ``sharded_lazy_greedy``)."""
     n = _check_shardable(z, mesh, axis)
-    run = _compiled("importance", fn, mesh, axis, n, lazy_budget)
+    run = _compiled("importance", fn, mesh, axis, n, lazy_budget,
+                    lazy_two_level)
     return run(z, _valid_or_all(n, valid))

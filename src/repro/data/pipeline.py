@@ -16,6 +16,15 @@ with device compute; worker exceptions propagate to the consumer instead of
 silently truncating the epoch, and abandoning an epoch early (break /
 ``close()`` on the iterator) signals the worker to stop instead of leaving
 it blocked forever on a full queue with batch arrays pinned.
+
+Device-resident fast path: when the dataset is a plain column store
+(``arrays={"x": feats, "y": labs}``), ``device_epoch`` hands the consumer
+the epoch's *entire* permuted (indices, weights) stream as two device
+arrays — one ``device_put`` per epoch instead of one host batch per step —
+and the fused training engine (``train.engine``) gathers each batch on
+device.  No host batch is ever assembled and the prefetch thread is
+bypassed entirely on this path; the index stream is the same pure function
+of (seed, epoch, step), so loop and fused runs consume identical batches.
 """
 from __future__ import annotations
 
@@ -53,17 +62,48 @@ class _WorkerError:
 
 @dataclasses.dataclass
 class Pipeline:
-    make_batch: Callable[[np.ndarray], dict]   # indices -> host batch dict
+    make_batch: Callable[[np.ndarray], dict] | None  # indices -> host batch
     selector: Any
     batch_size: int
     seed: int = 0
     drop_remainder: bool = True
     prefetch: bool = True
     weight_key: str | None = "weights"         # None disables weight injection
+    # Column store enabling the device-resident path: same-length arrays the
+    # batches are gathered from (``batch[k] = arrays[k][idx]``).  Providing
+    # it asserts ``make_batch`` is exactly that gather (``make_batch=None``
+    # derives it); custom batch assembly must leave this unset — consumers
+    # fall back to the host step loop.
+    arrays: dict[str, np.ndarray] | None = None
 
     def __post_init__(self):
         self._plan_cache: tuple[int, Any] | None = None
         self._plan_selector: Any = None
+        if self.arrays is not None:
+            lengths = {k: len(v) for k, v in self.arrays.items()}
+            if len(set(lengths.values())) > 1:
+                raise ValueError(
+                    f"arrays columns disagree on length: {lengths}"
+                )
+            if self.weight_key and self.weight_key in self.arrays:
+                raise ValueError(
+                    f"arrays column {self.weight_key!r} collides with "
+                    "weight_key: plan weights would silently shadow it"
+                )
+        if self.make_batch is None:
+            if self.arrays is None:
+                raise ValueError("make_batch=None requires arrays")
+            cols = self.arrays
+
+            def gather(idx: np.ndarray) -> dict:
+                return {k: v[idx] for k, v in cols.items()}
+
+            self.make_batch = gather
+
+    @property
+    def supports_device_epoch(self) -> bool:
+        """True when the device-resident fast path is available."""
+        return self.arrays is not None
 
     def invalidate_plan_cache(self) -> None:
         """Drop the memoized epoch plan (e.g. after a selector cache reset)."""
@@ -96,6 +136,40 @@ class Pipeline:
     def steps_per_epoch(self, epoch: int = 0) -> int:
         n = len(self.plan_for_epoch(epoch).indices)
         return n // self.batch_size if self.drop_remainder else -(-n // self.batch_size)
+
+    def device_epoch(self, epoch: int, *, start_step: int = 0):
+        """The epoch's remaining (indices, weights) as ``(n_steps, batch)``
+        device arrays — the device-resident fast path (``train.engine``).
+
+        One ``device_put`` covers the whole epoch; no host batch is
+        assembled and the prefetch thread never starts.  Step ``s`` of the
+        result is exactly the (index, weight) content of the ``s +
+        start_step``-th batch ``epoch()`` would yield — same permutation,
+        same drop/wrap-pad remainder handling — so restart replay stays a
+        pure function of (seed, epoch, step) on either path.
+        """
+        import jax.numpy as jnp  # deferred: data sits below jax consumers
+
+        if self.arrays is None:
+            raise ValueError(
+                "device_epoch needs the arrays column store; this pipeline "
+                "assembles custom host batches — use epoch()"
+            )
+        idx, weights = self._permuted(epoch)
+        n_steps = self.steps_per_epoch(epoch)
+        take = n_steps * self.batch_size
+        if take > len(idx):
+            # not drop_remainder: wrap-pad the final short batch from its own
+            # elements, exactly as epoch() does
+            lo = (n_steps - 1) * self.batch_size
+            pad = (0, take - len(idx))
+            idx = np.concatenate([idx[:lo], np.pad(idx[lo:], pad, mode="wrap")])
+            weights = np.concatenate(
+                [weights[:lo], np.pad(weights[lo:], pad, mode="wrap")]
+            )
+        idx = idx[:take].reshape(n_steps, self.batch_size)[start_step:]
+        weights = weights[:take].reshape(n_steps, self.batch_size)[start_step:]
+        return jnp.asarray(idx, jnp.int32), jnp.asarray(weights, jnp.float32)
 
     def epoch(self, epoch: int, *, start_step: int = 0) -> Iterator[dict]:
         """Yield batches; ``start_step`` skips ahead for restart replay."""

@@ -90,6 +90,9 @@ class MiloSessionConfig:
     # engine inside shard_map (see core.sharded.sharded_lazy_greedy)
     lazy_gains: bool = False
     lazy_threshold: float = 0.125
+    # right-size lazy gathers to pow2 levels (bit-identical; shrinks the
+    # sharded psum payload on calm steps — see MiloPreprocessor)
+    lazy_two_level: bool = False
     # bucketed SGE candidate counts from the true class geometry instead of
     # the padded bucket's (changes the stochastic draws; see MiloPreprocessor)
     exact_sge_candidates: bool = False
@@ -102,6 +105,12 @@ class MiloSessionConfig:
     # session tuning downstream seeds can still share one artifact (the
     # artifact is model-agnostic by design)
     prep_seed: int | None = None
+    # device-resident fused training (train.engine): gather batches on
+    # device from resident feature/label buffers and fuse `superstep` train
+    # steps into one scan dispatch with the state donated.  Falls back to
+    # the step loop automatically for pipelines without a column store.
+    fused_training: bool = False
+    superstep: int = 32
     # downstream classifier training
     lr: float = 0.05
     hidden: int = 64
@@ -134,6 +143,7 @@ class MiloSessionConfig:
             shard_selection=self.shard_selection,
             lazy_gains=self.lazy_gains,
             lazy_threshold=self.lazy_threshold,
+            lazy_two_level=self.lazy_two_level,
             exact_sge_candidates=self.exact_sge_candidates,
         )
 
@@ -433,11 +443,13 @@ class MiloSession:
         *,
         seed: int | None = None,
         prefetch: bool = True,
+        arrays: dict | None = None,
     ) -> pipeline_mod.Pipeline:
         return pipeline_mod.Pipeline(
             make_batch, selector, batch_size,
             seed=self.config.seed if seed is None else seed,
             prefetch=prefetch,
+            arrays=arrays,
         )
 
     # -- stage 2: train any number of downstream models ---------------------
@@ -507,14 +519,23 @@ class MiloSession:
                 f"k={plan0.k}; every epoch would yield zero batches"
             )
         # host batches here are cheap slices; prefetch=False keeps the epoch
-        # iterator plain so the warm-up read below can't strand a worker
-        pipe = self.pipeline(make_batch, sel, batch_size, seed=seed, prefetch=False)
+        # iterator plain so the warm-up read below can't strand a worker.
+        # The column store mirrors make_batch exactly, enabling the fused
+        # device-resident path when cfg.fused_training asks for it.
+        pipe = self.pipeline(
+            make_batch, sel, batch_size, seed=seed, prefetch=False,
+            arrays={"x": feats, "y": labs},
+        )
         steps = max(1, pipe.steps_per_epoch()) * epochs
         train_step = _classifier_step_fn(cfg.sub_steps)
-        state = _init_classifier(
-            jax.random.PRNGKey(seed), feats.shape[1], n_classes,
-            hidden, float(lr), steps,
-        )
+
+        def init_state():
+            return _init_classifier(
+                jax.random.PRNGKey(seed), feats.shape[1], n_classes,
+                hidden, float(lr), steps,
+            )
+
+        state = init_state()
         tx, ty = jnp.asarray(test_x), jnp.asarray(test_y)
 
         def acc_fn(params):
@@ -532,6 +553,8 @@ class MiloSession:
                 log_every_steps=1,
             ),
             eval_fn=eval_fn,
+            fused=cfg.fused_training,
+            superstep=cfg.superstep,
         )
         # warm the jit caches outside the timed region so selector comparisons
         # measure steady-state epochs, not compilation — including BOTH
@@ -543,6 +566,10 @@ class MiloSession:
         warm_batch = next(iter(pipe.epoch(0)))
         ws, _ = trainer.train_step(state, warm_batch)
         jax.block_until_ready(acc_fn(ws.params))
+        # the fused path adds its own (segment-shaped) programs: compile them
+        # on a throwaway state — donation invalidates ITS buffers, not ours
+        if trainer.fused_active():
+            trainer.warm_fused(init_state())
         # charge per-window/per-epoch selection to the timed region exactly
         # as benchmarks/common.py does — that cost is the paper's argument;
         # dropping BOTH caches keeps epoch 0's subset identical to the rest
@@ -580,10 +607,18 @@ class MiloSession:
         max_budget: int = 9,
         eta: int = 3,
         seed: int | None = None,
+        batched_objective: Any | None = None,
         **selector_kwargs: Any,
     ) -> HyperbandResult:
         """Hyperband over ``space`` with registry-selected subsets powering
-        every configuration evaluation (paper §4's 20-75x tuning speedups)."""
+        every configuration evaluation (paper §4's 20-75x tuning speedups).
+
+        ``batched_objective(configs, budget) -> scores`` opts a rung into one
+        batched evaluation of all its surviving configs (e.g. a trial scan
+        vmapped over ``tuner.stack_configs`` leaves — possible whenever the
+        space varies only traced leaves like ``lr``, not shapes like
+        ``hidden``); trials fall back to the sequential per-config loop
+        otherwise."""
         cfg = self.config
         seed = seed if seed is not None else cfg.seed
         tunable = {"lr", "hidden"}
@@ -615,4 +650,5 @@ class MiloSession:
             )
 
         objective = subset_objective(train_fn, selector_factory)
-        return hyperband(objective, search_obj, max_budget=max_budget, eta=eta)
+        return hyperband(objective, search_obj, max_budget=max_budget, eta=eta,
+                         batched_objective=batched_objective)

@@ -1,0 +1,141 @@
+"""Device-resident training engine: scan-fused supersteps over resident data.
+
+The per-batch training loop pays three taxes the math never asked for: one
+XLA dispatch per step, a host->device transfer per batch, and the Python
+bookkeeping between them.  MILO's subsets are small and known *before* the
+epoch starts (the whole point of model-agnostic selection), so none of that
+is necessary: the selected data can live on device for the entire run and
+whole stretches of the epoch can compile into ONE program.
+
+Two layers:
+
+  * ``make_superstep(train_step)`` — fuses ``S`` already-assembled batches
+    (stacked along a leading axis) into a single ``lax.scan`` with the
+    ``TrainState`` **donated**: the optimizer update writes into the input
+    state's buffers (zero-copy), and the host dispatches once per ``S``
+    steps instead of once per batch.
+
+  * ``epoch_engine(train_step)`` — the same scan, but batches are never
+    assembled on the host at all: the program takes the resident feature /
+    label **buffers** plus a ``(S, batch)`` block of the epoch's permuted
+    plan indices and weights (one ``device_put`` per epoch, see
+    ``Pipeline.device_epoch``) and gathers each batch **on device** inside
+    the scan body.  Plan weights ride along under ``weight_key`` exactly as
+    the host pipeline injects them.
+
+Per-step metrics come back stacked ``(S,)`` so logging loses nothing — the
+consumer (``Trainer``) replays them into per-step history records after the
+superstep returns.  Checkpoint boundaries must see the *actual* state, so
+the trainer cuts supersteps into segments that end exactly on
+``checkpoint_every_steps`` multiples (``segment_length``); restart replay
+stays a pure function of (seed, epoch, step).
+
+Programs are cached per (train_step, weight_key, donate) — a Hyperband sweep
+building one ``Trainer`` per trial reuses one compiled superstep per segment
+shape instead of recompiling every trial.
+"""
+from __future__ import annotations
+
+import weakref
+from typing import Any, Callable
+
+import jax
+
+from repro.train.train_state import TrainState
+
+TrainStep = Callable[[TrainState, dict], tuple[TrainState, dict]]
+
+
+def make_superstep(train_step: TrainStep, *, donate: bool = True):
+    """Fuse a stack of pre-assembled batches into one scan.
+
+    Returns ``superstep(state, batches) -> (state, stacked_metrics)`` where
+    every leaf of ``batches`` carries a leading step axis ``(S, ...)``.  With
+    ``donate=True`` (default) the input state's buffers are donated to the
+    program — invalidated on call, reused for the output state.
+    """
+
+    def superstep(state: TrainState, batches: dict):
+        def body(st, batch):
+            return train_step(st, batch)
+
+        return jax.lax.scan(body, state, batches)
+
+    return jax.jit(superstep, donate_argnums=(0,) if donate else ())
+
+
+#: train_step -> {(weight_key, donate): engine}.  Keyed on the step *object*
+#: on purpose: the session/bench step factories memoize their jitted steps,
+#: so every Trainer built around the same step shares one engine (and its
+#: per-segment-shape executables).  Weakly keyed so per-instance steps (a
+#: sweep jitting its own step per trial) don't pin their engines — and
+#: everything the step closure captures — for the life of the process.
+_ENGINE_CACHE: weakref.WeakKeyDictionary = weakref.WeakKeyDictionary()
+
+
+def epoch_engine(
+    train_step: TrainStep,
+    *,
+    weight_key: str | None = "weights",
+    donate: bool = True,
+):
+    """Superstep over device-resident data.
+
+    Returns ``engine(state, buffers, idx, w) -> (state, stacked_metrics)``:
+
+    * ``buffers`` — dict of resident column arrays (e.g. ``{"x": (n, d),
+      "y": (n,)}``), device_put once per training run,
+    * ``idx`` — ``(S, batch)`` int32 plan indices in visit order,
+    * ``w``  — ``(S, batch)`` float32 plan weights aligned with ``idx``.
+
+    Each scan step gathers its batch from the buffers on device
+    (``{k: buf[k][idx[t]]}``), injects ``w[t]`` under ``weight_key`` (unless
+    a buffer already claims that column, mirroring the host pipeline's
+    "don't clobber" rule), and applies ``train_step``.  The state is donated;
+    the buffers are not.
+    """
+    per_step = _ENGINE_CACHE.setdefault(train_step, {})
+    engine = per_step.get((weight_key, donate))
+    if engine is not None:
+        return engine
+
+    # the closure must not hold the step strongly: the cached engine is the
+    # cache VALUE, and a value referencing its weak KEY would keep the entry
+    # alive forever.  The engine is only reachable through this cache, so by
+    # the time anyone traces it the caller still holds the step.
+    step_ref = weakref.ref(train_step)
+
+    def engine_fn(state: TrainState, buffers: dict, idx, w):
+        step = step_ref()
+        assert step is not None, "train_step was garbage-collected"
+
+        def body(st, step_inputs):
+            bidx, bw = step_inputs
+            batch = {k: buf[bidx] for k, buf in buffers.items()}
+            if weight_key and weight_key not in batch:
+                batch[weight_key] = bw
+            return step(st, batch)
+
+        return jax.lax.scan(body, state, (idx, w))
+
+    engine = jax.jit(engine_fn, donate_argnums=(0,) if donate else ())
+    per_step[(weight_key, donate)] = engine
+    return engine
+
+
+def segment_length(
+    superstep: int, global_step: int, remaining: int, checkpoint_every: int
+) -> int:
+    """Steps the next superstep may fuse without skipping a boundary.
+
+    A segment ends at whichever comes first: the superstep size, the end of
+    the epoch, or the next ``checkpoint_every_steps`` multiple (checkpoints
+    need the actual state, which only exists between segments).  Logging
+    needs no boundary — per-step metrics come back stacked.
+    """
+    if superstep < 1:
+        raise ValueError(f"superstep must be >= 1, got {superstep}")
+    seg = min(superstep, remaining)
+    if checkpoint_every:
+        seg = min(seg, checkpoint_every - global_step % checkpoint_every)
+    return seg

@@ -13,6 +13,18 @@ The trainer composes:
 Logged history records carry the curriculum ``phase`` (sge/wre/fixed/
 adaptive) the epoch's subset came from, so loss curves can be segmented by
 selection regime.
+
+``Trainer(fused=True, superstep=S)`` swaps the per-batch Python loop for the
+device-resident engine (``train.engine``): the epoch's permuted plan
+(indices, weights) is device_put once, batches are gathered on device from
+the pipeline's resident column store, and ``S`` steps fuse into one
+``lax.scan`` dispatch with the state donated.  Checkpoint boundaries cut the
+scan into segments (the saved state is the real state at that step) and
+per-step metrics come back stacked, so history/checkpoint/restart semantics
+are identical to the loop path — same (seed, epoch, step) stream, same
+records.  Pipelines without an ``arrays`` column store (custom
+``make_batch``) or trainers with a custom ``put_batch`` fall back to the
+step loop automatically.
 """
 from __future__ import annotations
 
@@ -21,11 +33,13 @@ import time
 from typing import Any, Callable
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint.checkpointer import CheckpointManager
 from repro.data.pipeline import Pipeline
 from repro.distributed.fault_tolerance import StragglerMonitor
+from repro.train import engine as engine_mod
 from repro.train.train_state import TrainState
 
 
@@ -48,6 +62,8 @@ class Trainer:
         *,
         eval_fn: Callable[[TrainState], dict] | None = None,
         put_batch: Callable[[dict], dict] | None = None,
+        fused: bool = False,
+        superstep: int = 32,
     ):
         # respect pre-jitted steps (they expose .lower): re-wrapping would
         # give each Trainer its own compilation cache and defeat sharing
@@ -56,11 +72,25 @@ class Trainer:
         self.tcfg = tcfg
         self.eval_fn = eval_fn
         self.put_batch = put_batch or (lambda b: b)
+        self.fused = fused
+        self.superstep = superstep
+        # the fused path builds batches on device, so a custom put_batch
+        # (host-side placement/sharding hook) forces the loop path
+        self._custom_put = put_batch is not None
+        self._buffers: dict | None = None
         self.monitor = StragglerMonitor()
         self.ckpt = (
             CheckpointManager(tcfg.checkpoint_dir) if tcfg.checkpoint_dir else None
         )
         self.history: list[dict] = []
+
+    def fused_active(self) -> bool:
+        """Whether fit() will take the device-resident fused path."""
+        return (
+            self.fused
+            and not self._custom_put
+            and getattr(self.pipeline, "supports_device_epoch", False)
+        )
 
     def _epoch_phase(self, epoch: int) -> str | None:
         """Curriculum phase of this epoch's SelectionPlan (None for custom
@@ -79,6 +109,95 @@ class Trainer:
         state = self.ckpt.restore(latest, state)
         return state, latest
 
+    # -- device-resident fused path (train.engine) --------------------------
+
+    def _engine(self):
+        return engine_mod.epoch_engine(
+            self.train_step, weight_key=self.pipeline.weight_key
+        )
+
+    def _resident_buffers(self) -> dict:
+        if self._buffers is None:
+            self._buffers = {
+                k: jnp.asarray(v) for k, v in self.pipeline.arrays.items()
+            }
+        return self._buffers
+
+    def _fused_epoch(
+        self, state: TrainState, epoch: int, start_step: int,
+        global_step: int, t0: float, phase: str | None,
+    ) -> tuple[TrainState, int]:
+        """One epoch as a walk over scan segments; returns (state, step)."""
+        idx, w = self.pipeline.device_epoch(epoch, start_step=start_step)
+        buffers = self._resident_buffers()
+        engine = self._engine()
+        ckpt_every = self.tcfg.checkpoint_every_steps if self.ckpt else 0
+        n_steps = int(idx.shape[0])
+        pos = 0
+        while pos < n_steps:
+            seg = engine_mod.segment_length(
+                self.superstep, global_step, n_steps - pos, ckpt_every
+            )
+            self.monitor.start()
+            state, metrics = engine(
+                state, buffers, idx[pos : pos + seg], w[pos : pos + seg]
+            )
+            slow = self.monitor.stop(global_step + seg)
+            log_every = self.tcfg.log_every_steps
+            # only sync the stacked metrics to host when a log boundary
+            # actually falls inside this segment — log-free segments keep
+            # the dispatch pipeline unblocked
+            if log_every and (global_step + seg) // log_every * log_every > global_step:
+                # per-step metrics come back stacked (seg,): replay them into
+                # the same records the loop path writes.  wall/straggler are
+                # segment-grain — the only per-step observables a fused
+                # segment does not have.
+                host = jax.device_get(metrics)
+                wall = round(time.time() - t0, 2)
+                for i in range(seg):
+                    step_i = global_step + i + 1
+                    if step_i % log_every:
+                        continue
+                    rec = {k: float(v[i]) for k, v in host.items()}
+                    rec.update(step=step_i, epoch=epoch, wall=wall,
+                               straggler=slow)
+                    if phase is not None:
+                        rec["phase"] = phase
+                    self.history.append(rec)
+            global_step += seg
+            pos += seg
+            if ckpt_every and global_step % ckpt_every == 0:
+                if self.tcfg.async_checkpoint:
+                    self.ckpt.save_async(global_step, state)
+                else:
+                    self.ckpt.save(global_step, state)
+        return state, global_step
+
+    def warm_fused(self, throwaway: TrainState) -> None:
+        """Compile the fused segment programs outside any timed region.
+
+        Runs epoch 0's segment walk on ``throwaway`` — whose buffers are
+        DONATED, so the caller must not reuse it — covering the (full,
+        remainder) segment shapes a checkpoint-free run cycles through.
+        No history, checkpoints, or monitor records are produced.
+        """
+        if not self.fused_active():
+            return
+        idx, w = self.pipeline.device_epoch(0)
+        buffers = self._resident_buffers()
+        engine = self._engine()
+        n_steps = int(idx.shape[0])
+        pos = 0
+        while pos < n_steps:
+            seg = engine_mod.segment_length(
+                self.superstep, pos, n_steps - pos, 0
+            )
+            throwaway, _ = engine(
+                throwaway, buffers, idx[pos : pos + seg], w[pos : pos + seg]
+            )
+            pos += seg
+        jax.block_until_ready(throwaway)
+
     def fit(self, state: TrainState, *, resume: bool = True) -> TrainState:
         t0 = time.time()
         global_step = 0
@@ -87,9 +206,18 @@ class Trainer:
         steps_per_epoch = self.pipeline.steps_per_epoch()
         start_epoch = global_step // max(steps_per_epoch, 1)
         start_step = global_step % max(steps_per_epoch, 1)
+        fused = self.fused_active()
 
         for epoch in range(start_epoch, self.tcfg.epochs):
             phase = self._epoch_phase(epoch)
+            if fused:
+                state, global_step = self._fused_epoch(
+                    state, epoch,
+                    start_step if epoch == start_epoch else 0,
+                    global_step, t0, phase,
+                )
+                self._maybe_eval(state, epoch, global_step, t0)
+                continue
             for batch in self.pipeline.epoch(epoch, start_step=start_step if epoch == start_epoch else 0):
                 self.monitor.start()
                 state, metrics = self.train_step(state, self.put_batch(batch))
@@ -111,14 +239,19 @@ class Trainer:
                         self.ckpt.save_async(global_step, state)
                     else:
                         self.ckpt.save(global_step, state)
-            if self.eval_fn and self.tcfg.eval_every_epochs and (
-                (epoch + 1) % self.tcfg.eval_every_epochs == 0
-            ):
-                ev = {k: float(v) for k, v in self.eval_fn(state).items()}
-                ev.update(step=global_step, epoch=epoch, eval=True,
-                          wall=round(time.time() - t0, 2))
-                self.history.append(ev)
+            self._maybe_eval(state, epoch, global_step, t0)
         if self.ckpt is not None:
             self.ckpt.wait()
             self.ckpt.save(global_step, state)
         return state
+
+    def _maybe_eval(
+        self, state: TrainState, epoch: int, global_step: int, t0: float
+    ) -> None:
+        if self.eval_fn and self.tcfg.eval_every_epochs and (
+            (epoch + 1) % self.tcfg.eval_every_epochs == 0
+        ):
+            ev = {k: float(v) for k, v in self.eval_fn(state).items()}
+            ev.update(step=global_step, epoch=epoch, eval=True,
+                      wall=round(time.time() - t0, 2))
+            self.history.append(ev)

@@ -1,0 +1,364 @@
+"""Device-resident fused training engine (ISSUE 5 tentpole).
+
+Equivalence contract: ``Trainer(fused=True, superstep=S)`` consumes the same
+(seed, epoch, step) batch stream as the per-batch step loop — same permuted
+plan indices, same weights, same remainder handling — so final params and
+history must agree; checkpoints land on the same global steps and restart
+replay from a mid-epoch checkpoint reproduces the uninterrupted run.  The
+superstep donates the input state's buffers (zero-copy state updates).
+
+Batched hyperband: ``hyperband(..., batched_objective=...)`` evaluates all
+surviving configs of a rung in one call with bookkeeping identical to the
+sequential path — same trial stream, same best config under fixed seeds.
+"""
+from __future__ import annotations
+
+import shutil
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.pipeline import Pipeline
+from repro.models.classifier import init_mlp, nesterov_update, weighted_nll
+from repro.selection import build_selector
+from repro.train.engine import epoch_engine, make_superstep, segment_length
+from repro.train.trainer import Trainer, TrainerConfig
+from repro.tuning.tuner import RandomSearch, hyperband, stack_configs
+
+N, D, CLASSES = 256, 8, 4
+K, BATCH = 96, 16          # 6 steps per epoch
+
+
+class _State(NamedTuple):
+    params: dict
+    mom: dict
+    step: jax.Array
+
+
+def _train_step(state: _State, batch: dict):
+    loss, g = jax.value_and_grad(weighted_nll)(
+        state.params, batch["x"], batch["y"], batch["weights"]
+    )
+    params, mom = nesterov_update(state.params, state.mom, g, 0.05)
+    return _State(params, mom, state.step + 1), {"loss": loss}
+
+
+_STEP = jax.jit(_train_step)
+
+
+@pytest.fixture(scope="module")
+def data():
+    rng = np.random.default_rng(0)
+    feats = rng.normal(size=(N, D)).astype(np.float32)
+    labs = rng.integers(0, CLASSES, size=N).astype(np.int64)
+    return feats, labs
+
+
+def _init_state(seed: int = 0) -> _State:
+    params = init_mlp(jax.random.PRNGKey(seed), D, CLASSES)
+    return _State(params, jax.tree.map(jnp.zeros_like, params),
+                  jnp.zeros((), jnp.int32))
+
+
+def _pipelines(feats, labs, selector=None, **kw):
+    sel = selector or build_selector("adaptive_random", n=N, k=K, R=1, seed=3)
+
+    def make_batch(idx):
+        return {"x": feats[idx], "y": labs[idx]}
+
+    loop = Pipeline(make_batch, sel, BATCH, seed=1, prefetch=False, **kw)
+    fused = Pipeline(None, sel, BATCH, seed=1,
+                     arrays={"x": feats, "y": labs}, **kw)
+    return loop, fused
+
+
+def _assert_params_close(a, b, **kw):
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(la), np.asarray(lb), **kw)
+
+
+# ---------------------------------------------------------------------------
+# fused vs loop equivalence
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("superstep", [1, 4, 32])
+def test_fused_matches_loop_params_and_history(data, superstep):
+    """Same (seed, epoch, step) stream: final params and per-step history
+    agree between the fused engine and the per-batch loop, for supersteps
+    below, at, and above the epoch length."""
+    feats, labs = data
+    loop_pipe, fused_pipe = _pipelines(feats, labs)
+    tcfg = TrainerConfig(epochs=3, log_every_steps=1)
+    tr_loop = Trainer(_STEP, loop_pipe, tcfg)
+    tr_fused = Trainer(_STEP, fused_pipe, tcfg, fused=True, superstep=superstep)
+    assert tr_fused.fused_active() and not tr_loop.fused_active()
+
+    s_loop = tr_loop.fit(_init_state(), resume=False)
+    s_fused = tr_fused.fit(_init_state(), resume=False)
+
+    assert int(s_loop.step) == int(s_fused.step) == 18
+    _assert_params_close(s_loop.params, s_fused.params, rtol=1e-5, atol=1e-6)
+    assert len(tr_loop.history) == len(tr_fused.history) == 18
+    for ha, hb in zip(tr_loop.history, tr_fused.history):
+        # wall/straggler are wall-clock observables; everything else matches
+        assert (ha["step"], ha["epoch"], ha["phase"]) == (
+            hb["step"], hb["epoch"], hb["phase"])
+        np.testing.assert_allclose(ha["loss"], hb["loss"], rtol=1e-6)
+
+
+def test_fused_respects_log_every_and_weights(data):
+    """Plan weights flow into the on-device batches (non-uniform weights
+    change the loss) and log_every_steps>1 thins history identically."""
+    feats, labs = data
+    md_sel = build_selector("craig_pb", grad_fn=lambda: feats, k=K, R=1)
+    assert not np.allclose(md_sel.plan(0).weights, 1.0)  # genuinely weighted
+    loop_pipe, fused_pipe = _pipelines(feats, labs, selector=md_sel)
+    tcfg = TrainerConfig(epochs=2, log_every_steps=2)
+    tr_loop = Trainer(_STEP, loop_pipe, tcfg)
+    tr_fused = Trainer(_STEP, fused_pipe, tcfg, fused=True, superstep=4)
+    s_loop = tr_loop.fit(_init_state(), resume=False)
+    s_fused = tr_fused.fit(_init_state(), resume=False)
+    _assert_params_close(s_loop.params, s_fused.params, rtol=1e-5, atol=1e-6)
+    assert [h["step"] for h in tr_fused.history] == [2, 4, 6, 8, 10, 12]
+    for ha, hb in zip(tr_loop.history, tr_fused.history):
+        np.testing.assert_allclose(ha["loss"], hb["loss"], rtol=1e-6)
+
+
+def test_fused_wrap_padded_remainder_matches_loop(data):
+    """drop_remainder=False wrap-pads the final short batch identically on
+    both paths."""
+    feats, labs = data
+    sel = build_selector("random", n=N, k=90, seed=5)   # 90 % 16 != 0
+    loop_pipe, fused_pipe = _pipelines(feats, labs, selector=sel,
+                                       drop_remainder=False)
+    tcfg = TrainerConfig(epochs=2, log_every_steps=1)
+    tr_loop = Trainer(_STEP, loop_pipe, tcfg)
+    tr_fused = Trainer(_STEP, fused_pipe, tcfg, fused=True, superstep=4)
+    s_loop = tr_loop.fit(_init_state(), resume=False)
+    s_fused = tr_fused.fit(_init_state(), resume=False)
+    assert int(s_loop.step) == int(s_fused.step) == 12
+    _assert_params_close(s_loop.params, s_fused.params, rtol=1e-5, atol=1e-6)
+
+
+def test_fused_falls_back_without_column_store(data):
+    """A custom make_batch pipeline (no arrays) silently takes the loop
+    path; a custom put_batch forces it too."""
+    feats, labs = data
+    loop_pipe, fused_pipe = _pipelines(feats, labs)
+    tr = Trainer(_STEP, loop_pipe, TrainerConfig(epochs=1), fused=True)
+    assert not tr.fused_active()
+    state = tr.fit(_init_state(), resume=False)
+    assert int(state.step) == 6
+    tr2 = Trainer(_STEP, fused_pipe, TrainerConfig(epochs=1), fused=True,
+                  put_batch=lambda b: b)
+    assert not tr2.fused_active()
+
+
+def test_device_epoch_matches_epoch_batches(data):
+    """device_epoch's (indices, weights) stream is exactly the content of
+    epoch()'s batches, including start_step offsets and wrap padding."""
+    feats, labs = data
+    for drop in (True, False):
+        sel = build_selector("random", n=N, k=90, seed=7)
+        pipe = Pipeline(None, sel, BATCH, seed=2, drop_remainder=drop,
+                        arrays={"x": feats, "y": labs})
+        for start in (0, 2):
+            idx, w = pipe.device_epoch(4, start_step=start)
+            batches = list(pipe.epoch(4, start_step=start))
+            assert idx.shape[0] == len(batches)
+            for t, b in enumerate(batches):
+                np.testing.assert_array_equal(
+                    np.asarray(feats[np.asarray(idx[t])]), b["x"])
+                np.testing.assert_array_equal(np.asarray(w[t]), b["weights"])
+
+
+def test_pipeline_arrays_validation(data):
+    feats, labs = data
+    sel = build_selector("random", n=N, k=K, seed=0)
+    with pytest.raises(ValueError, match="length"):
+        Pipeline(None, sel, BATCH, arrays={"x": feats, "y": labs[:-1]})
+    with pytest.raises(ValueError, match="weight_key"):
+        Pipeline(None, sel, BATCH,
+                 arrays={"x": feats, "weights": np.ones(N, np.float32)})
+    with pytest.raises(ValueError, match="arrays"):
+        Pipeline(None, sel, BATCH)
+    plain = Pipeline(lambda i: {"x": feats[i]}, sel, BATCH)
+    assert not plain.supports_device_epoch
+    with pytest.raises(ValueError, match="device_epoch"):
+        plain.device_epoch(0)
+
+
+# ---------------------------------------------------------------------------
+# checkpointing: boundaries + mid-epoch restart replay
+# ---------------------------------------------------------------------------
+
+def test_fused_mid_epoch_restart_replay(data, tmp_path):
+    """Resuming from a mid-epoch checkpoint replays the identical stream:
+    the resumed run's final params match the uninterrupted run's."""
+    feats, labs = data
+    _, fused_pipe = _pipelines(feats, labs)
+
+    def make_trainer(ckpt_dir):
+        # 6 steps/epoch, checkpoint every 5: step 5 is mid-epoch 0
+        return Trainer(
+            _STEP, fused_pipe,
+            TrainerConfig(epochs=2, checkpoint_dir=ckpt_dir,
+                          checkpoint_every_steps=5, async_checkpoint=False,
+                          log_every_steps=1),
+            fused=True, superstep=32,
+        )
+
+    full_dir = str(tmp_path / "full")
+    tr_full = make_trainer(full_dir)
+    s_full = tr_full.fit(_init_state(), resume=False)
+    assert int(s_full.step) == 12
+
+    # the engine cut segments exactly on the checkpoint boundary
+    tr = make_trainer(str(tmp_path / "probe"))
+    assert tr.ckpt.all_steps() == []
+    assert sorted(tr_full.ckpt.all_steps()) == [5, 10, 12]
+
+    # resume from the MID-EPOCH step-5 checkpoint only
+    resume_dir = str(tmp_path / "resume")
+    shutil.copytree(f"{full_dir}/step_5", f"{resume_dir}/step_5")
+    tr_res = make_trainer(resume_dir)
+    s_res = tr_res.fit(_init_state(), resume=True)
+    assert int(s_res.step) == 12
+    _assert_params_close(s_full.params, s_res.params, rtol=1e-6, atol=1e-7)
+    # replayed history covers exactly the post-restore steps
+    assert [h["step"] for h in tr_res.history] == list(range(6, 13))
+
+
+def test_segment_length_boundaries():
+    assert segment_length(32, 0, 100, 0) == 32
+    assert segment_length(32, 0, 7, 0) == 7
+    assert segment_length(8, 13, 100, 5) == 2     # next ckpt at step 15
+    assert segment_length(8, 15, 100, 5) == 5
+    assert segment_length(1, 0, 100, 0) == 1
+    with pytest.raises(ValueError):
+        segment_length(0, 0, 10, 0)
+
+
+# ---------------------------------------------------------------------------
+# donation
+# ---------------------------------------------------------------------------
+
+def test_superstep_donates_state_buffers(data):
+    """The input state's buffers are invalidated by the superstep call —
+    the zero-copy update the donation exists for."""
+    feats, labs = data
+    superstep = make_superstep(_STEP)
+    state = _init_state()
+    batches = {
+        "x": jnp.asarray(feats[:32]).reshape(2, 16, D),
+        "y": jnp.asarray(labs[:32]).reshape(2, 16),
+        "weights": jnp.ones((2, 16), jnp.float32),
+    }
+    out, metrics = superstep(state, batches)
+    assert metrics["loss"].shape == (2,)
+    assert state.params["w1"].is_deleted()
+    assert not out.params["w1"].is_deleted()
+    # the resident buffers are NOT donated: an epoch reuses them every call
+    engine = epoch_engine(_STEP)
+    bufs = {"x": jnp.asarray(feats), "y": jnp.asarray(labs)}
+    idx = jnp.arange(32, dtype=jnp.int32).reshape(2, 16)
+    w = jnp.ones((2, 16), jnp.float32)
+    out2, _ = engine(out, bufs, idx, w)
+    assert out.params["w1"].is_deleted()
+    assert not bufs["x"].is_deleted()
+    assert epoch_engine(_STEP) is engine  # program cache shared per step fn
+
+
+# ---------------------------------------------------------------------------
+# session wiring
+# ---------------------------------------------------------------------------
+
+def test_session_fused_training_matches_loop(data):
+    from repro.selection.session import MiloSession, MiloSessionConfig
+
+    feats, labs = data
+    base = dict(selector="random", subset_fraction=K / N, total_epochs=4,
+                batch_size=BATCH, seed=0)
+    r_loop = MiloSession(MiloSessionConfig(**base)).train(
+        feats, labs, test_x=feats[:40], test_y=labs[:40])
+    r_fused = MiloSession(MiloSessionConfig(fused_training=True, superstep=4,
+                                            **base)).train(
+        feats, labs, test_x=feats[:40], test_y=labs[:40])
+    assert r_loop.steps == r_fused.steps
+    np.testing.assert_allclose(r_loop.final_acc, r_fused.final_acc, atol=1e-6)
+    losses_l = [h["loss"] for h in r_loop.history if "loss" in h]
+    losses_f = [h["loss"] for h in r_fused.history if "loss" in h]
+    np.testing.assert_allclose(losses_l, losses_f, rtol=1e-5, atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# batched hyperband rungs
+# ---------------------------------------------------------------------------
+
+def test_batched_hyperband_identical_to_sequential():
+    """A deterministic objective: batched evaluation must reproduce the
+    sequential trial stream EXACTLY (same configs, budgets, scores, best)."""
+
+    def objective(cfg, budget):
+        return -abs(np.log10(cfg["lr"]) + 1.0) + 0.05 * np.log1p(budget)
+
+    def batched(configs, budget):
+        return [objective(c, budget) for c in configs]
+
+    space = {"lr": ("log", 1e-4, 1.0)}
+    seq = hyperband(objective, RandomSearch(space, seed=0), max_budget=9, eta=3)
+    bat = hyperband(None, RandomSearch(space, seed=0), max_budget=9, eta=3,
+                    batched_objective=batched)
+    assert seq.best_config == bat.best_config
+    assert seq.best_score == bat.best_score
+    assert seq.trials == bat.trials
+    assert seq.total_epochs == bat.total_epochs
+
+
+def test_batched_hyperband_vmapped_objective_matches():
+    """A genuinely vmapped jax objective over stacked lr leaves picks the
+    same best config as its scalar counterpart."""
+
+    def score_impl(lr):
+        return -jnp.abs(jnp.log10(lr) + 1.0)
+
+    score = jax.jit(score_impl)
+    score_batch = jax.jit(jax.vmap(score_impl))
+
+    def objective(cfg, budget):
+        return float(score(jnp.asarray(cfg["lr"], jnp.float32)))
+
+    def batched(configs, budget):
+        lrs = jnp.asarray(stack_configs(configs)["lr"], jnp.float32)
+        return np.asarray(score_batch(lrs))
+
+    space = {"lr": ("log", 1e-4, 1.0)}
+    seq = hyperband(objective, RandomSearch(space, seed=1), max_budget=9, eta=3)
+    bat = hyperband(None, RandomSearch(space, seed=1), max_budget=9, eta=3,
+                    batched_objective=batched)
+    assert seq.best_config == bat.best_config
+    assert [t["config"] for t in seq.trials] == [t["config"] for t in bat.trials]
+    np.testing.assert_allclose([t["score"] for t in seq.trials],
+                               [t["score"] for t in bat.trials], rtol=1e-6)
+
+
+def test_batched_hyperband_guards():
+    space = {"lr": ("log", 1e-4, 1.0)}
+    with pytest.raises(ValueError, match="objective"):
+        hyperband(None, RandomSearch(space, seed=0))
+    with pytest.raises(ValueError, match="scores"):
+        hyperband(None, RandomSearch(space, seed=0), max_budget=9, eta=3,
+                  batched_objective=lambda cfgs, b: [0.0])
+
+
+def test_stack_configs():
+    stacked = stack_configs([{"lr": 0.1, "wd": 1.0}, {"lr": 0.2, "wd": 2.0}])
+    np.testing.assert_allclose(stacked["lr"], [0.1, 0.2])
+    np.testing.assert_allclose(stacked["wd"], [1.0, 2.0])
+    with pytest.raises(ValueError, match="keys"):
+        stack_configs([{"lr": 0.1}, {"wd": 1.0}])
+    with pytest.raises(ValueError, match="no configs"):
+        stack_configs([])

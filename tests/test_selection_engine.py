@@ -617,3 +617,134 @@ def test_second_preprocess_triggers_zero_new_compiles():
     assert compiles == [], f"second preprocess() recompiled {len(compiles)} programs"
     np.testing.assert_array_equal(first.sge_subsets, second.sge_subsets)
     np.testing.assert_array_equal(first.wre_importance, second.wre_importance)
+
+
+# ---------------------------------------------------------------------------
+# two-level lazy gather budget (ISSUE 5 satellite)
+# ---------------------------------------------------------------------------
+
+def test_gather_levels_cover_budget():
+    from repro.core.greedy import _gather_levels
+
+    assert _gather_levels(1) == (1,)
+    assert _gather_levels(8) == (1, 2, 4, 8)
+    assert _gather_levels(96) == (1, 2, 4, 8, 16, 32, 64, 96)
+    for budget in (1, 3, 7, 64, 100):
+        levels = _gather_levels(budget)
+        assert levels[-1] == budget and sorted(levels) == list(levels)
+        # every touched count m <= budget has a covering level
+        assert all(any(lv >= m for lv in levels) for m in range(budget + 1))
+
+
+@pytest.mark.parametrize("masked", [False, True])
+def test_two_level_lazy_gather_bit_identical(masked):
+    """Right-sizing the gather to the smallest covering pow2 level removes
+    only exact-zero delta terms (surplus slots carry an infinite cover), so
+    indices AND gains are bit-identical to the single-level path; the
+    recorded per-step payload shrinks to the touched count's level."""
+    fn, z = _fl_fixtures(192)["gram_free"]
+    n, budget = 192, 24
+    valid = jnp.arange(n) < 160 if masked else None
+    a = lazy_greedy(fn, z, n, budget=budget, valid=valid)
+    b = lazy_greedy(fn, z, n, budget=budget, valid=valid, two_level=True)
+    np.testing.assert_array_equal(np.asarray(a.indices), np.asarray(b.indices))
+    np.testing.assert_array_equal(np.asarray(a.gains), np.asarray(b.gains))
+    ra, rb = np.asarray(a.rows_evaluated), np.asarray(b.rows_evaluated)
+    # full recomputes (budget overflow) happen on exactly the same steps
+    np.testing.assert_array_equal(ra == n, rb == n)
+    # post-exhaustion guarded steps record 0 rows on both paths; the lazy
+    # steps are the strictly-between ones
+    lazy_a, lazy_b = ra[(ra > 0) & (ra < n)], rb[(rb > 0) & (rb < n)]
+    assert np.all(lazy_a == budget)
+    from repro.core.greedy import _gather_levels
+
+    assert set(lazy_b.tolist()) <= set(_gather_levels(budget))
+    # the payload actually shrinks on calm steps
+    assert lazy_b.sum() < lazy_a.sum()
+
+
+def test_two_level_importance_and_preprocessor_identical():
+    """greedy_importance(lazy_two_level=True) and the preprocessor knob
+    produce bit-identical artifacts to the single-level lazy path."""
+    fn, z = _fl_fixtures(128)["gram_free"]
+    a = greedy_importance(fn, z, lazy_budget=16)
+    b = greedy_importance(fn, z, lazy_budget=16, lazy_two_level=True)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    rng = np.random.default_rng(40)
+    feats = rng.normal(size=(120, 8)).astype(np.float32)
+    labels = np.repeat(np.arange(3), 40)
+    kw = dict(subset_fraction=0.2, gram_free=True, lazy_gains=True,
+              hard_fn="facility_location")
+    md1 = MiloPreprocessor(**kw).preprocess(feats, labels, jax.random.PRNGKey(0))
+    md2 = MiloPreprocessor(lazy_two_level=True, **kw).preprocess(
+        feats, labels, jax.random.PRNGKey(0))
+    np.testing.assert_array_equal(md1.sge_subsets, md2.sge_subsets)
+    np.testing.assert_array_equal(md1.wre_importance, md2.wre_importance)
+    np.testing.assert_array_equal(md1.wre_probs, md2.wre_probs)
+    assert md2.config["lazy_two_level"] is True
+
+
+# ---------------------------------------------------------------------------
+# shape-bucketed engine warmup (ISSUE 5 satellite)
+# ---------------------------------------------------------------------------
+
+def _count_backend_compiles(run):
+    """Run ``run()`` under jax.monitoring's backend-compile event listener
+    and return the number of programs it compiled."""
+    compiles: list[str] = []
+
+    def listener(name, duration, **kwargs):
+        if name == "/jax/core/compile/backend_compile_duration":
+            compiles.append(name)
+
+    from jax._src import monitoring as _monitoring
+
+    unregister = getattr(
+        _monitoring, "_unregister_event_duration_listener_by_callback", None)
+    jax.monitoring.register_event_duration_secs_listener(listener)
+    try:
+        run()
+    finally:
+        if unregister is not None:
+            unregister(listener)
+        else:  # pragma: no cover
+            jax.monitoring.clear_event_listeners()
+    return len(compiles)
+
+
+@pytest.mark.parametrize("gram_free", [True, False])
+def test_warmup_precompiles_preprocess_programs(gram_free):
+    """After warmup(buckets=...) on the upcoming class geometry, the real
+    preprocess() triggers ZERO backend compiles — the whole point of
+    pre-compiling the (n, k, budget) engine programs at session start."""
+    from repro.core.partition import partition_by_class, proportional_budgets
+
+    rng = np.random.default_rng(41)
+    labels = np.concatenate([np.repeat(np.arange(3), 30), np.full(14, 3)])
+    feats = rng.normal(size=(len(labels), 8)).astype(np.float32)
+    pre = MiloPreprocessor(
+        subset_fraction=0.1, gram_free=gram_free, lazy_gains=gram_free,
+        hard_fn="facility_location" if gram_free else "disparity_min",
+    )
+    parts = partition_by_class(labels)
+    k = max(1, int(round(0.1 * len(labels))))
+    buckets = [(len(p.indices), b)
+               for p, b in zip(parts, proportional_budgets(parts, k))]
+    warmed = pre.warmup(buckets, d=feats.shape[1])
+    assert warmed >= 1
+    md = None
+
+    def run():
+        nonlocal md
+        md = pre.preprocess(feats, labels, jax.random.PRNGKey(0))
+
+    n_compiles = _count_backend_compiles(run)
+    assert n_compiles == 0, f"preprocess compiled {n_compiles} programs after warmup"
+    # warmup ran on dummy data: the real artifact is built from real features
+    assert md.m == len(labels) and md.k == k
+
+
+def test_warmup_dedupes_repeated_geometries():
+    pre = MiloPreprocessor(subset_fraction=0.1, gram_free=True)
+    assert pre.warmup([(30, 3)] * 10 + [(0, 0), (5, 0)], d=4) == 1

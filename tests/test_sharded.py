@@ -402,3 +402,51 @@ def test_selection_mesh_validates_device_count():
     assert selection_mesh(4).shape["sel"] == 4
     with pytest.raises(ValueError, match="out of range"):
         selection_mesh(10**6)
+
+
+@multi_device
+def test_sharded_two_level_gather_bit_identical_and_smaller_payload():
+    """ISSUE 5 satellite: the two-level gather budget under shard_map.
+    Right-sizing the touched-row gather to the smallest covering pow2 level
+    shrinks the one-owner psum payload (rows_evaluated records the level
+    actually gathered) while indices AND gains stay bit-identical to the
+    single-level sharded run."""
+    from repro.core import make_sharded_gram_free, sharded_lazy_greedy
+    from repro.core.greedy import _gather_levels
+
+    n, budget = 256, 32
+    z = _fixture(n, seed=6)
+    fns = make_sharded_gram_free("facility_location", n_shards=8)
+    a = sharded_lazy_greedy(fns, z, n, budget=budget, mesh=_mesh())
+    b = sharded_lazy_greedy(fns, z, n, budget=budget, mesh=_mesh(),
+                            two_level=True)
+    np.testing.assert_array_equal(np.asarray(a.indices), np.asarray(b.indices))
+    np.testing.assert_array_equal(np.asarray(a.gains), np.asarray(b.gains))
+    ra, rb = np.asarray(a.rows_evaluated), np.asarray(b.rows_evaluated)
+    np.testing.assert_array_equal(ra == n, rb == n)  # same fallback steps
+    lazy_a, lazy_b = ra[ra < n], rb[rb < n]
+    assert np.all(lazy_a == budget)
+    assert set(lazy_b.tolist()) <= set(_gather_levels(budget))
+    assert lazy_b.sum() < lazy_a.sum()  # the psum payload really shrank
+
+
+@multi_device
+def test_sharded_two_level_importance_matches_single_device():
+    """sharded_greedy_importance(lazy_two_level=True) equals the
+    single-device two-level pass (which itself is bit-identical to the
+    single-level one) to the documented ring-psum rounding."""
+    from repro.core import (
+        get_gram_free,
+        greedy_importance,
+        make_sharded_gram_free,
+        sharded_greedy_importance,
+    )
+
+    z = _fixture(128, seed=7)
+    fn1 = get_gram_free("facility_location")
+    fns = make_sharded_gram_free("facility_location", n_shards=8)
+    a = greedy_importance(fn1, z, lazy_budget=16, lazy_two_level=True)
+    b = sharded_greedy_importance(fns, z, mesh=_mesh(), lazy_budget=16,
+                                  lazy_two_level=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-5, atol=1e-5)

@@ -1,11 +1,18 @@
-"""Property tests for the set functions and greedy engines (hypothesis)."""
+"""Property + example tests for the set functions and greedy engines.
+
+``hypothesis`` is optional: when absent only the property tests skip (they
+guard individually), and the example-based tests still run in bare
+containers — mirroring ``test_exploration.py``.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis")  # optional dep: skip, don't error, when absent
-from hypothesis import given, settings, strategies as st
+try:  # optional dep: skip the property tests only, keep the rest running
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover
+    given = settings = st = None
 
 from repro.core import (
     disparity_min,
@@ -34,59 +41,58 @@ FNS = {
 }
 
 
-@settings(max_examples=20, deadline=None)
-@given(seed=st.integers(0, 10_000), n=st.integers(4, 16))
-def test_incremental_gains_match_evaluate(seed, n):
-    """gains(state) must equal f(S u j) - f(S) computed from scratch."""
-    K = _kernel(n, seed)
-    rng = np.random.default_rng(seed)
-    for name, fn in FNS.items():
-        mask = np.zeros(n, bool)
-        state = fn.init(K)
-        for j in rng.permutation(n)[: n // 2]:
-            gains = np.asarray(fn.gains(state, K))
-            before = float(fn.evaluate(jnp.asarray(mask), K))
-            mask[j] = True
-            after = float(fn.evaluate(jnp.asarray(mask), K))
-            np.testing.assert_allclose(gains[j], after - before, rtol=1e-4, atol=1e-4,
-                                       err_msg=f"{name} at j={j}")
-            state = fn.update(state, K, jnp.asarray(j))
+if st is not None:
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 10_000), n=st.integers(4, 16))
+    def test_incremental_gains_match_evaluate(seed, n):
+        """gains(state) must equal f(S u j) - f(S) computed from scratch."""
+        K = _kernel(n, seed)
+        rng = np.random.default_rng(seed)
+        for name, fn in FNS.items():
+            mask = np.zeros(n, bool)
+            state = fn.init(K)
+            for j in rng.permutation(n)[: n // 2]:
+                gains = np.asarray(fn.gains(state, K))
+                before = float(fn.evaluate(jnp.asarray(mask), K))
+                mask[j] = True
+                after = float(fn.evaluate(jnp.asarray(mask), K))
+                np.testing.assert_allclose(gains[j], after - before, rtol=1e-4, atol=1e-4,
+                                           err_msg=f"{name} at j={j}")
+                state = fn.update(state, K, jnp.asarray(j))
 
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 10_000))
+    def test_submodularity_diminishing_returns(seed):
+        """f(A u x) - f(A) >= f(B u x) - f(B) for A subset B (submodular fns)."""
+        n = 10
+        K = _kernel(n, seed)
+        rng = np.random.default_rng(seed)
+        for fn in (facility_location, graph_cut):
+            perm = rng.permutation(n)
+            a_idx, b_extra, x = perm[:3], perm[3:6], int(perm[6])
+            sa = fn.init(K)
+            for j in a_idx:
+                sa = fn.update(sa, K, jnp.asarray(j))
+            sb = sa
+            for j in b_extra:
+                sb = fn.update(sb, K, jnp.asarray(j))
+            ga = float(fn.gains(sa, K)[x])
+            gb = float(fn.gains(sb, K)[x])
+            assert ga >= gb - 1e-4, (fn.name, ga, gb)
 
-@settings(max_examples=15, deadline=None)
-@given(seed=st.integers(0, 10_000))
-def test_submodularity_diminishing_returns(seed):
-    """f(A u x) - f(A) >= f(B u x) - f(B) for A subset B (submodular fns)."""
-    n = 10
-    K = _kernel(n, seed)
-    rng = np.random.default_rng(seed)
-    for fn in (facility_location, graph_cut):
-        perm = rng.permutation(n)
-        a_idx, b_extra, x = perm[:3], perm[3:6], int(perm[6])
-        sa = fn.init(K)
-        for j in a_idx:
-            sa = fn.update(sa, K, jnp.asarray(j))
-        sb = sa
-        for j in b_extra:
-            sb = fn.update(sb, K, jnp.asarray(j))
-        ga = float(fn.gains(sa, K)[x])
-        gb = float(fn.gains(sb, K)[x])
-        assert ga >= gb - 1e-4, (fn.name, ga, gb)
-
-
-@settings(max_examples=15, deadline=None)
-@given(seed=st.integers(0, 10_000))
-def test_monotonicity(seed):
-    n = 8
-    K = _kernel(n, seed)
-    for fn in (facility_location, graph_cut):
-        mask = np.zeros(n, bool)
-        prev = float(fn.evaluate(jnp.asarray(mask), K))
-        for j in np.random.default_rng(seed).permutation(n):
-            mask[j] = True
-            cur = float(fn.evaluate(jnp.asarray(mask), K))
-            assert cur >= prev - 1e-4, fn.name
-            prev = cur
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 10_000))
+    def test_monotonicity(seed):
+        n = 8
+        K = _kernel(n, seed)
+        for fn in (facility_location, graph_cut):
+            mask = np.zeros(n, bool)
+            prev = float(fn.evaluate(jnp.asarray(mask), K))
+            for j in np.random.default_rng(seed).permutation(n):
+                mask[j] = True
+                cur = float(fn.evaluate(jnp.asarray(mask), K))
+                assert cur >= prev - 1e-4, fn.name
+                prev = cur
 
 
 def test_greedy_approximation_vs_bruteforce():

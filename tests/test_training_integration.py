@@ -7,6 +7,11 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+try:  # optional dep: property tests guard individually
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover
+    given = settings = st = None
+
 from repro.baselines.selectors import (
     AdaptiveRandomSelector,
     CraigPBSelector,
@@ -158,3 +163,42 @@ def test_kendall_tau():
     assert kendall_tau(a, a) == 1.0
     assert kendall_tau(a, -a) == -1.0
     assert abs(kendall_tau(a, np.asarray([1.0, 2.0, 4.0, 3.0]))) < 1.0
+
+
+def _kendall_tau_loop(a, b):
+    """The former O(n²) pair-loop implementation, kept as the property-test
+    oracle for the vectorized sign-outer-product version."""
+    n = len(a)
+    num = 0
+    den = 0
+    for i in range(n):
+        for j in range(i + 1, n):
+            x = np.sign(a[i] - a[j])
+            y = np.sign(b[i] - b[j])
+            if x and y:
+                num += int(x == y) - int(x != y)
+                den += 1
+    return num / den if den else 0.0
+
+
+def test_kendall_tau_matches_loop_with_ties():
+    rng = np.random.default_rng(0)
+    a = rng.integers(0, 4, size=12).astype(float)   # plenty of ties
+    b = rng.integers(0, 4, size=12).astype(float)
+    assert kendall_tau(a, b) == pytest.approx(_kendall_tau_loop(a, b))
+    # all-tied vectors have no comparable pairs
+    assert kendall_tau(np.ones(5), np.arange(5.0)) == 0.0
+    assert kendall_tau(np.arange(2.0), np.arange(2.0)) == 1.0
+
+
+if st is not None:
+    @settings(max_examples=50, deadline=None)
+    @given(
+        st.lists(st.integers(-5, 5), min_size=2, max_size=20),
+        st.lists(st.integers(-5, 5), min_size=2, max_size=20),
+    )
+    def test_kendall_tau_property_vs_loop(xs, ys):
+        n = min(len(xs), len(ys))
+        a = np.asarray(xs[:n], float)
+        b = np.asarray(ys[:n], float)
+        assert kendall_tau(a, b) == pytest.approx(_kendall_tau_loop(a, b))
