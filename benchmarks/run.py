@@ -17,6 +17,7 @@ module names as argv to run a subset, e.g.
   bench_ablations      — Tab. 1,2,13,14 (hardness, kappa, R)
   bench_preprocess     — App. H.3 (preprocess cost, greedy/SGE throughput)
   bench_kernels        — kernel microbenches
+  bench_serving        — warm MiloServer vs N cold sessions (concurrent tuning)
 """
 from __future__ import annotations
 
@@ -101,6 +102,7 @@ def main(argv: list[str] | None = None) -> None:
         bench_exploration,
         bench_kernels,
         bench_preprocess,
+        bench_serving,
         bench_set_functions,
         bench_training,
         bench_tuning,
@@ -113,6 +115,7 @@ def main(argv: list[str] | None = None) -> None:
         ("set_functions", bench_set_functions, "selection"),
         ("exploration", bench_exploration, "selection"),
         ("training", bench_training, "training"),
+        ("serving", bench_serving, "training"),
         ("tuning", bench_tuning, "selection"),
         ("ablations", bench_ablations, "selection"),
         ("preprocess", bench_preprocess, "selection"),

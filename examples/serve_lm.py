@@ -14,7 +14,7 @@ import numpy as np
 
 from repro.configs import registry
 from repro.models import lm
-from repro.serve.engine import Request, ServeEngine
+from repro.serve.lm_engine import Request, ServeEngine
 
 
 def main():

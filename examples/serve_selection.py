@@ -1,0 +1,55 @@
+"""Selection-as-a-service example: one warm ``MiloServer``, several tenants
+submitting concurrent tuning requests that share a single preprocessing
+artifact and one set of device-resident feature buffers.
+
+Run:  PYTHONPATH=src python examples/serve_selection.py
+"""
+import tempfile
+import time
+
+from repro.data.datasets import GaussianMixtureDataset
+from repro.selection import MiloSessionConfig
+from repro.serve import MiloClient, MiloServer
+
+SPACE = {"lr": ("log", 3e-3, 0.3)}
+N_TENANTS = 3
+
+
+def main():
+    ds = GaussianMixtureDataset(n=1200, n_classes=6, dim=24, seed=0)
+    tr, va, te = ds.split()
+    feats, labs = ds.features()[tr], ds.y[tr]
+    vx, vy = ds.features()[va], ds.y[va]
+
+    cfg = MiloSessionConfig(
+        subset_fraction=0.1, n_sge_subsets=4, total_epochs=30,
+        eval_every_epochs=10, gram_free=True, fused_training=True,
+    )
+    with MiloServer(cfg, store_root=tempfile.mkdtemp()) as server:
+        # pay preprocessing + every compile ONCE, before traffic arrives
+        t0 = time.time()
+        warm = server.warm(feats, labs, val_x=vx, val_y=vy, space=SPACE)
+        print(f"warm: {warm} ({time.time()-t0:.1f}s)")
+
+        # N tenants submit tuning runs; each gets its own search seed but
+        # every request resolves to the same cached artifact
+        t0 = time.time()
+        rids = [
+            MiloClient(server, tenant=f"tenant-{i}").submit_tune(
+                feats, labs, vx, vy, SPACE,
+                max_budget=9, eta=3, seed=100 + i, deadline=300.0,
+            )
+            for i in range(N_TENANTS)
+        ]
+        for rid in rids:
+            res = server.result(rid)
+            row = server.poll(rid)
+            print(f"{rid} [{row['tenant']:9s}] best={res.best_score:.4f} "
+                  f"config={res.best_config} artifact={row['artifact_source']}")
+        print(f"{N_TENANTS} tuning runs in {time.time()-t0:.1f}s "
+              f"(shared artifact, zero re-preprocessing)")
+        print("server stats:", server.stats())
+
+
+if __name__ == "__main__":
+    main()

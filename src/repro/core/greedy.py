@@ -158,7 +158,8 @@ def _gather_levels(budget: int) -> tuple[int, ...]:
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("fn", "k", "budget", "n", "two_level"))
+                   static_argnames=("fn", "k", "budget", "n", "two_level",
+                                    "verify_argmax", "verify_top"))
 def lazy_greedy(
     fn: SetFunction,
     K: jax.Array,
@@ -168,6 +169,8 @@ def lazy_greedy(
     valid: jax.Array | None = None,
     n: int | None = None,
     two_level: bool = False,
+    verify_argmax: bool = False,
+    verify_top: int = 8,
 ) -> LazyGreedyResult:
     """Exact greedy with lazy gain reuse (``SetFunction.lazy`` hooks).
 
@@ -205,6 +208,19 @@ def lazy_greedy(
     (and, under ``shard_map``, the cross-device psum of the gathered block)
     drops to the touched count on calm steps.  ``rows_evaluated`` records
     the level actually gathered.
+
+    ``verify_argmax=True`` adds CELF-style exact re-verification of every
+    pick: the step shortlists the ``verify_top`` best *cached* gains,
+    re-evaluates exactly those candidates through ``SetFunction.gains_at``,
+    and picks the exact winner — ties resolved to the LOWEST ground index,
+    matching ``jnp.argmax`` on the full vector, so the selected *indices*
+    agree with ``greedy`` bit-for-bit even where cached-gain drift flips
+    sub-ulp near-ties.  The recorded gain is the exact re-evaluated one
+    (equal to greedy's to the reduction-order ulp: the candidate-gather and
+    full-matrix reductions may round differently), and the shortlist's
+    exact values are scattered back into the cache.  Sound whenever the true argmax sits within the shortlist —
+    drift is ≤ a few ulps, so any ``verify_top`` > the near-tie multiplicity
+    suffices.  Costs one O(n · verify_top) gather per step.
     """
     if fn.lazy is None:
         raise ValueError(
@@ -216,6 +232,9 @@ def lazy_greedy(
             f"budget={budget} out of range [1, {n}] (a budget of n already "
             "contracts every row — use greedy() instead)"
         )
+    if verify_argmax and verify_top < 1:
+        raise ValueError(f"verify_top={verify_top} must be >= 1")
+    v_top = min(verify_top, n)
     lz = fn.lazy
     state0 = fn.init(K)
     g0 = fn.gains(state0, K)
@@ -223,8 +242,21 @@ def lazy_greedy(
 
     def step(t, carry):
         state, g, selected, idxs, gs, rows = carry
-        j = _masked_argmax(g, selected)
-        gain_j = jnp.where(selected[j], _NEG, g[j]).astype(jnp.float32)
+        if verify_argmax:
+            # CELF re-verification: shortlist by cached gain, decide by
+            # exact gain (selected shortlist fillers masked out), break
+            # exact ties toward the lowest ground index — the same winner
+            # greedy()'s full-vector argmax picks
+            _, cand = jax.lax.top_k(jnp.where(selected, _NEG, g), v_top)
+            exact = _gains_at(fn, state, K, cand)
+            exact = jnp.where(selected[cand], _NEG, exact)
+            best = jnp.max(exact)
+            j = jnp.min(jnp.where(exact >= best, cand, n))
+            gain_j = best.astype(jnp.float32)
+            g = g.at[cand].set(exact.astype(g.dtype))
+        else:
+            j = _masked_argmax(g, selected)
+            gain_j = jnp.where(selected[j], _NEG, g[j]).astype(jnp.float32)
         c_old = lz.cover(state)
         state = fn.update(state, K, j)
         c_new = lz.cover(state)
@@ -430,7 +462,8 @@ def sge(
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("fn", "n", "lazy_budget", "lazy_two_level"))
+                   static_argnames=("fn", "n", "lazy_budget", "lazy_two_level",
+                                    "lazy_verify"))
 def greedy_importance(
     fn: SetFunction,
     K: jax.Array,
@@ -439,6 +472,7 @@ def greedy_importance(
     n: int | None = None,
     lazy_budget: int | None = None,
     lazy_two_level: bool = False,
+    lazy_verify: bool = False,
 ) -> jax.Array:
     """Paper Alg. 3: full greedy over the whole ground set.
 
@@ -455,11 +489,13 @@ def greedy_importance(
     function provides lazy hooks (facility location does); ignored otherwise.
     ``lazy_two_level`` right-sizes each lazy gather to the smallest pow2
     level covering the touched rows (bit-identical; see ``lazy_greedy``).
+    ``lazy_verify`` turns on CELF exact argmax re-verification, pinning the
+    lazy pass to ``greedy``'s trajectory through sub-ulp near-ties.
     """
     n_ = K.shape[0] if n is None else n
     if lazy_budget is not None and fn.lazy is not None:
         res = lazy_greedy(fn, K, n_, budget=lazy_budget, valid=valid, n=n_,
-                          two_level=lazy_two_level)
+                          two_level=lazy_two_level, verify_argmax=lazy_verify)
     else:
         res = greedy(fn, K, n_, valid=valid, n=n_)
     g = jnp.full((n_,), _NEG, jnp.float32)

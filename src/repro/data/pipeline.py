@@ -75,6 +75,13 @@ class Pipeline:
     # derives it); custom batch assembly must leave this unset — consumers
     # fall back to the host step loop.
     arrays: dict[str, np.ndarray] | None = None
+    # Externally owned device placements of the SAME columns (e.g. from a
+    # ``repro.serve.BufferRegistry``): consumers on the device-resident path
+    # (``Trainer``) use these instead of device_put-ing their own copy, so N
+    # concurrent trainers over one dataset share one buffer per column.  The
+    # host ``arrays`` stay authoritative for shapes/validation; ``resident``
+    # must cover exactly the same keys.
+    resident: dict[str, Any] | None = None
 
     def __post_init__(self):
         self._plan_cache: tuple[int, Any] | None = None
@@ -90,6 +97,23 @@ class Pipeline:
                     f"arrays column {self.weight_key!r} collides with "
                     "weight_key: plan weights would silently shadow it"
                 )
+        if self.resident is not None:
+            if self.arrays is None:
+                raise ValueError("resident buffers require the arrays "
+                                 "column store they mirror")
+            if set(self.resident) != set(self.arrays):
+                raise ValueError(
+                    f"resident buffers cover {sorted(self.resident)} but the "
+                    f"column store holds {sorted(self.arrays)}; they must "
+                    "mirror the same columns"
+                )
+            for k, buf in self.resident.items():
+                if tuple(buf.shape) != tuple(np.shape(self.arrays[k])):
+                    raise ValueError(
+                        f"resident buffer {k!r} has shape {tuple(buf.shape)} "
+                        f"but the host column is "
+                        f"{tuple(np.shape(self.arrays[k]))}"
+                    )
         if self.make_batch is None:
             if self.arrays is None:
                 raise ValueError("make_batch=None requires arrays")

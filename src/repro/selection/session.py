@@ -226,7 +226,13 @@ def _classifier_step_fn(sub_steps: int):
 class MiloSession:
     """Facade over preprocess → (many) train → tune."""
 
-    def __init__(self, config: MiloSessionConfig | None = None, **overrides: Any):
+    def __init__(
+        self,
+        config: MiloSessionConfig | None = None,
+        *,
+        buffer_registry: Any | None = None,
+        **overrides: Any,
+    ):
         if config is None:
             config = MiloSessionConfig(**overrides)
         elif overrides:
@@ -234,6 +240,10 @@ class MiloSession:
         self.config = config
         self.metadata: MiloMetadata | None = None
         self.loaded_from_artifact = False
+        # optional repro.serve.BufferRegistry: when attached, train() places
+        # its feature/label columns through it, so N sessions over the same
+        # dataset share one device buffer per column (fused path only)
+        self.buffer_registry = buffer_registry
 
     # -- stage 1: model-agnostic preprocessing ------------------------------
 
@@ -264,16 +274,68 @@ class MiloSession:
             self.metadata = md
             self.loaded_from_artifact = True
             return self.metadata
+        md = self.build_metadata(features, labels, encoder_id=encoder_id)
+        if cfg.metadata_path:
+            md.save(cfg.metadata_path)
+        self.metadata = md
+        self.loaded_from_artifact = False
+        return md
+
+    def build_metadata(
+        self,
+        features: np.ndarray,
+        labels: np.ndarray | None = None,
+        *,
+        encoder_id: str = "precomputed",
+        fingerprint: str | None = None,
+    ) -> MiloMetadata:
+        """The pure compute unit behind ``preprocess``: run the model-agnostic
+        pass and return the stamped artifact WITHOUT touching session state or
+        the configured ``metadata_path``.
+
+        This is what a serving layer (``repro.serve.ArtifactStore``) calls as
+        its build function — the store owns persistence and caching, so the
+        session must not also write files or mutate ``self.metadata`` here.
+        The data fingerprint is always stamped (callers may pass a
+        precomputed one to skip rehashing the feature matrix).
+        """
+        cfg = self.config
         md = cfg.preprocessor().preprocess(
             features, labels, jax.random.PRNGKey(cfg.resolved_prep_seed()),
             encoder_id=encoder_id, prep_seed=cfg.resolved_prep_seed(),
         )
-        if cfg.metadata_path:
-            # only worth hashing when the artifact can be reloaded later
-            md.config["data_fingerprint"] = _data_fingerprint(features)
-            md.save(cfg.metadata_path)
+        md.config["data_fingerprint"] = (
+            fingerprint if fingerprint is not None
+            else _data_fingerprint(features)
+        )
+        return md
+
+    def adopt_metadata(
+        self, md: MiloMetadata, *, loaded: bool = True
+    ) -> MiloMetadata:
+        """Install an externally owned artifact (e.g. one the serving layer's
+        store built or reloaded) as this session's preprocessing result, after
+        the same config verification a ``metadata_path`` load applies."""
+        expected = self.config.expected_artifact_config()
+        bad = {
+            k: (md.config.get(k), v)
+            for k, v in expected.items()
+            if k in md.config and md.config.get(k) != v
+        }
+        if bad:
+            raise MetadataMismatchError(
+                f"adopted artifact: config mismatch on {bad} (stored, expected)"
+            )
+        stored_seed = md.config.get("prep_seed")
+        expected_seed = self.config.resolved_prep_seed()
+        if stored_seed is not None and stored_seed != expected_seed:
+            raise MetadataMismatchError(
+                "adopted artifact: config mismatch on "
+                f"{{'prep_seed': ({stored_seed}, {expected_seed})}} "
+                "(stored, expected)"
+            )
         self.metadata = md
-        self.loaded_from_artifact = False
+        self.loaded_from_artifact = loaded
         return md
 
     def _load_artifact(
@@ -444,12 +506,16 @@ class MiloSession:
         seed: int | None = None,
         prefetch: bool = True,
         arrays: dict | None = None,
+        resident: dict | None = None,
     ) -> pipeline_mod.Pipeline:
+        if resident is None and arrays is not None and self.buffer_registry is not None:
+            resident = self.buffer_registry.get(arrays)
         return pipeline_mod.Pipeline(
             make_batch, selector, batch_size,
             seed=self.config.seed if seed is None else seed,
             prefetch=prefetch,
             arrays=arrays,
+            resident=resident,
         )
 
     # -- stage 2: train any number of downstream models ---------------------
@@ -608,6 +674,7 @@ class MiloSession:
         eta: int = 3,
         seed: int | None = None,
         batched_objective: Any | None = None,
+        should_stop: Any | None = None,
         **selector_kwargs: Any,
     ) -> HyperbandResult:
         """Hyperband over ``space`` with registry-selected subsets powering
@@ -618,7 +685,9 @@ class MiloSession:
         vmapped over ``tuner.stack_configs`` leaves — possible whenever the
         space varies only traced leaves like ``lr``, not shapes like
         ``hidden``); trials fall back to the sequential per-config loop
-        otherwise."""
+        otherwise.  ``should_stop()`` is polled before every rung (see
+        ``tuning.hyperband``) — the serving layer's cancellation/deadline
+        hook; an early stop returns ``stopped=True``."""
         cfg = self.config
         seed = seed if seed is not None else cfg.seed
         tunable = {"lr", "hidden"}
@@ -651,4 +720,5 @@ class MiloSession:
 
         objective = subset_objective(train_fn, selector_factory)
         return hyperband(objective, search_obj, max_budget=max_budget, eta=eta,
-                         batched_objective=batched_objective)
+                         batched_objective=batched_objective,
+                         should_stop=should_stop)

@@ -1,0 +1,46 @@
+"""repro.serve — selection-as-a-service.
+
+* ``MiloServer`` / ``MiloClient`` — persistent multi-tenant selection
+  server: versioned artifact store, warm compiled-program pool, shared
+  device buffers, worker-thread request lifecycle (submit/poll/result/
+  cancel, deadlines, structured request log).
+* ``ArtifactStore`` — (data_fingerprint, config_hash)-keyed two-tier
+  (memory LRU + disk) ``MiloMetadata`` store with single-flight builds,
+  pinning, and per-key versions.
+* ``BufferRegistry`` — device-resident column dedup: N concurrent
+  Trainers over one dataset share one ``device_put`` per column.
+* ``ServeEngine`` (``repro.serve.lm_engine``) — the separate batched LM
+  decode engine; unrelated workload, same package.
+"""
+from repro.serve.buffers import BufferRegistry, array_fingerprint
+from repro.serve.server import (
+    CANCELLED,
+    DONE,
+    ERROR,
+    EXPIRED,
+    QUEUED,
+    RUNNING,
+    MiloClient,
+    MiloServer,
+    ServeRequest,
+    artifact_request_config,
+)
+from repro.serve.store import ArtifactEntry, ArtifactKey, ArtifactStore
+
+__all__ = [
+    "ArtifactEntry",
+    "ArtifactKey",
+    "ArtifactStore",
+    "BufferRegistry",
+    "MiloClient",
+    "MiloServer",
+    "ServeRequest",
+    "array_fingerprint",
+    "artifact_request_config",
+    "QUEUED",
+    "RUNNING",
+    "DONE",
+    "ERROR",
+    "CANCELLED",
+    "EXPIRED",
+]

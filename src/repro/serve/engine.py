@@ -1,130 +1,11 @@
-"""Batched serving engine: continuous prefill + decode over a fixed-slot
-request pool (vLLM-style slot management, JAX-native static shapes).
+"""Import shim: the LM decode engine moved to ``repro.serve.lm_engine``.
 
-The engine owns a KV cache of ``max_batch`` slots x ``max_len`` positions.
-Requests enter a queue; free slots are prefилled (one request at a time on
-CPU; batched prefill on a real pod), and every ``step()`` decodes one token
-for all active slots.  Finished requests (EOS or length) free their slot.
-
-Static shapes everywhere — the decode step compiles once; slot turnover is
-pure data movement.  This is the serving-side end-to-end driver (deliverable
-(b)): see examples/serve_lm.py.
+``repro.serve`` now hosts two engines — the batched LM prefill/decode
+engine (``lm_engine``) and the selection-serving subsystem
+(``store``/``buffers``/``server``: persistent multi-tenant ``MiloServer``).
+The old ``repro.serve.engine`` path keeps resolving to the LM engine so
+existing imports and scripts continue to work.
 """
-from __future__ import annotations
+from repro.serve.lm_engine import Request, ServeEngine
 
-import dataclasses
-from typing import Callable
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.configs.base import ModelConfig
-from repro.models import lm
-
-
-@dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: np.ndarray           # (P,) int32
-    max_new_tokens: int = 32
-    generated: list[int] = dataclasses.field(default_factory=list)
-    done: bool = False
-
-
-class ServeEngine:
-    def __init__(self, params, cfg: ModelConfig, *, max_batch: int = 4,
-                 max_len: int = 128, eos_id: int | None = None,
-                 sampler: Callable | None = None):
-        self.params = params
-        self.cfg = cfg
-        self.max_batch = max_batch
-        self.max_len = max_len
-        self.eos_id = eos_id
-        self.caches = lm.init_caches(cfg, max_batch, max_len)
-        self.slot_req: list[Request | None] = [None] * max_batch
-        self.slot_pos = np.zeros(max_batch, np.int32)     # next write position
-        self.slot_budget = np.zeros(max_batch, np.int32)  # remaining new tokens
-        self.last_token = np.zeros((max_batch, 1), np.int32)
-        self.queue: list[Request] = []
-        self.finished: list[Request] = []
-
-        self._decode = jax.jit(
-            lambda p, c, tok, pos: lm.decode_step(p, cfg, tok, c, pos)
-        )
-        # per-slot prefill uses a batch-1 forward then writes into the pool
-        self._prefill = jax.jit(
-            lambda p, toks: lm.prefill(
-                p, cfg, toks, lm.init_caches(cfg, 1, self.max_len)
-            )
-        )
-
-    # -- queue management ----------------------------------------------------
-
-    def submit(self, req: Request) -> None:
-        self.queue.append(req)
-
-    def _free_slots(self) -> list[int]:
-        return [i for i, r in enumerate(self.slot_req) if r is None]
-
-    def _admit(self) -> None:
-        for slot in self._free_slots():
-            if not self.queue:
-                break
-            req = self.queue.pop(0)
-            logits, cache1 = self._prefill(self.params, req.prompt[None, :])
-            first = int(np.argmax(np.asarray(logits)[0, -1]))
-            req.generated.append(first)
-            # copy the request's prefill state into the pool at ``slot`` —
-            # every cache leaf (KV, SSM state, per-slot lengths) has the
-            # batch at dim 1
-            self.caches = jax.tree.map(
-                lambda pool, one: pool.at[:, slot : slot + 1].set(one.astype(pool.dtype)),
-                self.caches,
-                cache1,
-            )
-            self.slot_req[slot] = req
-            self.slot_pos[slot] = len(req.prompt)
-            self.slot_budget[slot] = req.max_new_tokens - 1
-            self.last_token[slot, 0] = first
-
-    # -- decode --------------------------------------------------------------
-
-    def step(self) -> int:
-        """Admit waiting requests, decode one token for all active slots.
-
-        Returns the number of active slots stepped.
-        """
-        self._admit()
-        active = [i for i, r in enumerate(self.slot_req) if r is not None]
-        if not active:
-            return 0
-        # per-slot positions: each slot decodes at its own cache length (the
-        # KVCache.length leaves track this inside the model; rope positions
-        # come from the same per-slot vector)
-        pos = jnp.asarray(self.slot_pos, jnp.int32)
-        logits, self.caches = self._decode(
-            self.params, self.caches, jnp.asarray(self.last_token), pos
-        )
-        nxt = np.asarray(jnp.argmax(logits[:, -1, :], axis=-1), np.int32)
-        for i in active:
-            req = self.slot_req[i]
-            tok = int(nxt[i])
-            req.generated.append(tok)
-            self.slot_pos[i] += 1
-            self.last_token[i, 0] = tok
-            self.slot_budget[i] -= 1
-            if self.slot_budget[i] <= 0 or (self.eos_id is not None and tok == self.eos_id) \
-               or self.slot_pos[i] >= self.max_len - 1:
-                req.done = True
-                self.finished.append(req)
-                self.slot_req[i] = None
-        return len(active)
-
-    def run(self, max_steps: int = 1000) -> list[Request]:
-        steps = 0
-        while (self.queue or any(r is not None for r in self.slot_req)) and steps < max_steps:
-            if self.step() == 0 and not self.queue:
-                break
-            steps += 1
-        return self.finished
+__all__ = ["Request", "ServeEngine"]

@@ -1,0 +1,245 @@
+"""Versioned artifact store: the server-side home of ``MiloMetadata``.
+
+MILO's economics rest on computing a preprocessing artifact ONCE per
+(dataset, config) and serving it to arbitrarily many downstream trainings.
+``ArtifactStore`` makes that a property of a long-lived process instead of a
+file path convention:
+
+  * **Keying** — artifacts are addressed by ``(data_fingerprint,
+    config_hash)``: the content hash of the feature matrix and the canonical
+    hash of the preprocessing config (``repro.core.metadata.config_hash``).
+    Same data + same config → same key → one artifact, however many clients
+    ask.
+  * **Single-flight builds** — concurrent requests for a missing key block
+    on one per-key build lock; exactly one preprocessing run happens and
+    every waiter receives its result.  ``builds`` / ``hits`` / ``disk_loads``
+    counters make the claim testable.
+  * **Two tiers** — an in-memory LRU of decoded ``MiloMetadata`` objects in
+    front of an optional on-disk root (one ``.npz`` per key, written through
+    ``MiloMetadata.save``'s atomic temp-file rename).  Evicting a memory
+    entry keeps the disk copy; the next request reloads it through the PR 1
+    reuse guards (config-hash verification), bit-identical to the original.
+  * **Pinning** — pinned keys are exempt from LRU eviction (for tenants with
+    a latency SLO on a known dataset).
+  * **Versioning** — each rebuild of a key (``force=True``) bumps a
+    monotonically increasing per-key version, recorded in the entry and the
+    request log, so a client can tell whether two responses came from the
+    same artifact generation.
+
+The store never invents artifacts: a disk file whose stored config hash does
+not match the requested config raises ``MetadataMismatchError`` (the same
+guard ``MiloSession`` applies to ``metadata_path`` artifacts).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import os
+import threading
+from typing import Any, Callable
+
+from repro.core.metadata import (
+    MetadataMismatchError,
+    MiloMetadata,
+    config_hash,
+)
+
+#: (data_fingerprint, config_hash)
+ArtifactKey = tuple[str, str]
+
+
+@dataclasses.dataclass
+class ArtifactEntry:
+    """Bookkeeping for one stored artifact (metadata may be evicted)."""
+
+    key: ArtifactKey
+    version: int
+    pinned: bool = False
+    hits: int = 0
+    path: str | None = None
+
+
+class ArtifactStore:
+    """In-memory LRU + on-disk artifact store with single-flight builds."""
+
+    def __init__(self, root: str | None = None, *, capacity: int = 8):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.root = root
+        self.capacity = capacity
+        self._lock = threading.RLock()
+        # insertion order == recency order (move_to_end on every touch)
+        self._memory: collections.OrderedDict[ArtifactKey, MiloMetadata] = (
+            collections.OrderedDict()
+        )
+        self._entries: dict[ArtifactKey, ArtifactEntry] = {}
+        self._flights: dict[ArtifactKey, threading.Lock] = {}
+        self.builds = 0
+        self.hits = 0
+        self.disk_loads = 0
+        self.evictions = 0
+        if root:
+            os.makedirs(root, exist_ok=True)
+
+    # -- keys ---------------------------------------------------------------
+
+    @staticmethod
+    def key_for(data_fingerprint: str, config: dict[str, Any]) -> ArtifactKey:
+        """The store key for a (dataset, preprocessing-config) pair."""
+        return (data_fingerprint, config_hash(config))
+
+    def path_for(self, key: ArtifactKey) -> str | None:
+        if self.root is None:
+            return None
+        return os.path.join(self.root, f"{key[0]}_{key[1]}.npz")
+
+    # -- pin policy ---------------------------------------------------------
+
+    def pin(self, key: ArtifactKey) -> None:
+        with self._lock:
+            entry = self._entries.get(key)
+            if entry is None:
+                raise KeyError(f"unknown artifact key {key}")
+            entry.pinned = True
+
+    def unpin(self, key: ArtifactKey) -> None:
+        with self._lock:
+            entry = self._entries.get(key)
+            if entry is not None:
+                entry.pinned = False
+
+    # -- lookup / build -----------------------------------------------------
+
+    def get_or_build(
+        self,
+        key: ArtifactKey,
+        expected_config: dict[str, Any],
+        build_fn: Callable[[], MiloMetadata],
+        *,
+        pin: bool = False,
+        force: bool = False,
+    ) -> tuple[MiloMetadata, ArtifactEntry, str]:
+        """Return ``(artifact, entry, source)`` for ``key``, building at most
+        once; ``source`` is ``"memory"`` / ``"disk"`` / ``"built"`` (the
+        request-log observable behind the serving bench's warm/cold split).
+
+        Resolution order: in-memory hit → on-disk reload (verified against
+        ``expected_config`` through the ``MiloMetadata.load`` reuse guards)
+        → ``build_fn()`` (exactly one concurrent caller runs it; the rest
+        wait on the per-key flight lock and hit the fresh entry).
+        ``force=True`` skips both caches, reruns ``build_fn`` and bumps the
+        key's version.
+        """
+        flight = self._flight(key)
+        with flight:
+            if not force:
+                cached = self._memory_hit(key)
+                if cached is not None:
+                    if pin:
+                        cached[1].pinned = True
+                    return (*cached, "memory")
+                loaded = self._disk_load(key, expected_config)
+                if loaded is not None:
+                    if pin:
+                        loaded[1].pinned = True
+                    return (*loaded, "disk")
+            md = build_fn()
+            with self._lock:
+                self.builds += 1
+                entry = self._entries.get(key)
+                if entry is None:
+                    entry = ArtifactEntry(key=key, version=1,
+                                          path=self.path_for(key))
+                    self._entries[key] = entry
+                else:
+                    entry.version += 1
+                entry.pinned = entry.pinned or pin
+            path = self.path_for(key)
+            if path is not None:
+                md.save(path)
+            self._install(key, md)
+            return md, self._entries[key], "built"
+
+    def _flight(self, key: ArtifactKey) -> threading.Lock:
+        with self._lock:
+            return self._flights.setdefault(key, threading.Lock())
+
+    def _memory_hit(self, key: ArtifactKey) -> tuple[MiloMetadata, ArtifactEntry] | None:
+        with self._lock:
+            md = self._memory.get(key)
+            if md is None:
+                return None
+            self._memory.move_to_end(key)
+            entry = self._entries[key]
+            entry.hits += 1
+            self.hits += 1
+            return md, entry
+
+    def _disk_load(
+        self, key: ArtifactKey, expected_config: dict[str, Any]
+    ) -> tuple[MiloMetadata, ArtifactEntry] | None:
+        path = self.path_for(key)
+        if path is None or not os.path.exists(path):
+            return None
+        # the reuse guards (same semantics as MiloSession's metadata_path
+        # load): the stored config must agree with the request's on every
+        # key the request specifies — partial-dict check, because the
+        # artifact records MORE than the request config (encoder, seeds,
+        # engine provenance) and key[1] hashes only the request's view —
+        # and a recorded data fingerprint must match the key's.  A foreign
+        # file parked at this key's path fails one of the two.
+        md = MiloMetadata.load(path, expected_config=expected_config or None)
+        stored_fp = md.config.get("data_fingerprint")
+        if stored_fp is not None and stored_fp != key[0]:
+            raise MetadataMismatchError(
+                f"{path}: artifact was preprocessed over different data "
+                f"(fingerprint {stored_fp} != requested {key[0]})"
+            )
+        with self._lock:
+            self.disk_loads += 1
+            entry = self._entries.get(key)
+            if entry is None:
+                # artifact predates this process (written by an earlier
+                # server); adopt it at version 1
+                entry = ArtifactEntry(key=key, version=1, path=path)
+                self._entries[key] = entry
+            entry.hits += 1
+        self._install(key, md)
+        return md, self._entries[key]
+
+    def _install(self, key: ArtifactKey, md: MiloMetadata) -> None:
+        """Insert into the memory tier, evicting LRU unpinned entries."""
+        with self._lock:
+            self._memory[key] = md
+            self._memory.move_to_end(key)
+            evictable = [
+                k for k in self._memory
+                if k != key and not self._entries[k].pinned
+            ]
+            # oldest first (OrderedDict preserves recency order)
+            while len(self._memory) > self.capacity and evictable:
+                victim = evictable.pop(0)
+                del self._memory[victim]
+                self.evictions += 1
+
+    # -- introspection ------------------------------------------------------
+
+    def resident(self, key: ArtifactKey) -> bool:
+        """Whether the decoded artifact currently sits in the memory tier."""
+        with self._lock:
+            return key in self._memory
+
+    def entries(self) -> list[ArtifactEntry]:
+        with self._lock:
+            return [dataclasses.replace(e) for e in self._entries.values()]
+
+    def stats(self) -> dict[str, int]:
+        with self._lock:
+            return {
+                "builds": self.builds,
+                "hits": self.hits,
+                "disk_loads": self.disk_loads,
+                "evictions": self.evictions,
+                "resident": len(self._memory),
+                "known": len(self._entries),
+            }

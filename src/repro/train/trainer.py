@@ -51,6 +51,13 @@ class TrainerConfig:
     checkpoint_every_steps: int = 0
     async_checkpoint: bool = True
     log_every_steps: int = 50
+    # fused path only: drain segment i's stacked metrics to host AFTER
+    # segment i+1 has been dispatched, so the device→host copy overlaps the
+    # next scan's execution instead of stalling the dispatch pipeline.
+    # History records are bit-identical to the synchronous drain (same
+    # metrics, same order — only the wall timestamps move); False restores
+    # the in-line copy for A/B tests.
+    async_history: bool = True
 
 
 class Trainer:
@@ -64,6 +71,7 @@ class Trainer:
         put_batch: Callable[[dict], dict] | None = None,
         fused: bool = False,
         superstep: int = 32,
+        resident_buffers: dict | None = None,
     ):
         # respect pre-jitted steps (they expose .lower): re-wrapping would
         # give each Trainer its own compilation cache and defeat sharing
@@ -77,7 +85,12 @@ class Trainer:
         # the fused path builds batches on device, so a custom put_batch
         # (host-side placement/sharding hook) forces the loop path
         self._custom_put = put_batch is not None
-        self._buffers: dict | None = None
+        # externally owned resident column buffers (highest precedence, then
+        # the pipeline's shared ``resident`` dict, then a private device_put
+        # of the host columns).  External buffers are never donated — the
+        # engine donates only the train state — so N trainers can share them.
+        self._buffers: dict | None = resident_buffers
+        self._pending_history: tuple | None = None
         self.monitor = StragglerMonitor()
         self.ckpt = (
             CheckpointManager(tcfg.checkpoint_dir) if tcfg.checkpoint_dir else None
@@ -118,7 +131,8 @@ class Trainer:
 
     def _resident_buffers(self) -> dict:
         if self._buffers is None:
-            self._buffers = {
+            shared = getattr(self.pipeline, "resident", None)
+            self._buffers = shared if shared is not None else {
                 k: jnp.asarray(v) for k, v in self.pipeline.arrays.items()
             }
         return self._buffers
@@ -148,22 +162,22 @@ class Trainer:
             # actually falls inside this segment — log-free segments keep
             # the dispatch pipeline unblocked
             if log_every and (global_step + seg) // log_every * log_every > global_step:
-                # per-step metrics come back stacked (seg,): replay them into
-                # the same records the loop path writes.  wall/straggler are
-                # segment-grain — the only per-step observables a fused
-                # segment does not have.
-                host = jax.device_get(metrics)
-                wall = round(time.time() - t0, 2)
-                for i in range(seg):
-                    step_i = global_step + i + 1
-                    if step_i % log_every:
-                        continue
-                    rec = {k: float(v[i]) for k, v in host.items()}
-                    rec.update(step=step_i, epoch=epoch, wall=wall,
-                               straggler=slow)
-                    if phase is not None:
-                        rec["phase"] = phase
-                    self.history.append(rec)
+                if self.tcfg.async_history:
+                    # async drain: segment i's engine call above has already
+                    # been dispatched, so copying segment i-1's metrics NOW
+                    # overlaps that copy with i's on-device execution; i's
+                    # own metrics wait one iteration as the new pending
+                    # record.  Record content and order are identical to the
+                    # synchronous path — only the drain timing moves.
+                    self._drain_history(t0)
+                    self._pending_history = (
+                        metrics, seg, global_step, epoch, phase, slow
+                    )
+                else:
+                    self._pending_history = (
+                        metrics, seg, global_step, epoch, phase, slow
+                    )
+                    self._drain_history(t0)
             global_step += seg
             pos += seg
             if ckpt_every and global_step % ckpt_every == 0:
@@ -171,7 +185,34 @@ class Trainer:
                     self.ckpt.save_async(global_step, state)
                 else:
                     self.ckpt.save(global_step, state)
+        # epoch boundary: flush the trailing pending segment so eval records
+        # (and the next epoch's) land after it, exactly as the sync path
+        self._drain_history(t0)
         return state, global_step
+
+    def _drain_history(self, t0: float) -> None:
+        """Replay the pending segment's stacked metrics into per-step
+        history records (the device→host copy happens here)."""
+        if self._pending_history is None:
+            return
+        metrics, seg, global_step, epoch, phase, slow = self._pending_history
+        self._pending_history = None
+        # per-step metrics come back stacked (seg,): replay them into
+        # the same records the loop path writes.  wall/straggler are
+        # segment-grain — the only per-step observables a fused
+        # segment does not have.
+        host = jax.device_get(metrics)
+        wall = round(time.time() - t0, 2)
+        log_every = self.tcfg.log_every_steps
+        for i in range(seg):
+            step_i = global_step + i + 1
+            if step_i % log_every:
+                continue
+            rec = {k: float(v[i]) for k, v in host.items()}
+            rec.update(step=step_i, epoch=epoch, wall=wall, straggler=slow)
+            if phase is not None:
+                rec["phase"] = phase
+            self.history.append(rec)
 
     def warm_fused(self, throwaway: TrainState) -> None:
         """Compile the fused segment programs outside any timed region.
@@ -200,6 +241,7 @@ class Trainer:
 
     def fit(self, state: TrainState, *, resume: bool = True) -> TrainState:
         t0 = time.time()
+        self._pending_history = None  # defensive: a prior fit() that raised
         global_step = 0
         if resume:
             state, global_step = self._maybe_restore(state)

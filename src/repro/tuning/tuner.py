@@ -105,6 +105,10 @@ class HyperbandResult:
     trials: list[dict]
     total_epochs: int
     wall_time: float
+    # True when a ``should_stop`` hook ended the run early (server-driven
+    # cancellation / deadline): best_config/trials cover the rungs that
+    # actually ran.  A completed run always records False.
+    stopped: bool = False
 
 
 def subset_objective(
@@ -149,6 +153,7 @@ def hyperband(
     eta: int = 3,
     seed: int = 0,
     batched_objective: Callable[[list[dict], int], Any] | None = None,
+    should_stop: Callable[[], bool] | None = None,
 ) -> HyperbandResult:
     """Hyperband [Li'17]: brackets of successive halving.
 
@@ -163,6 +168,12 @@ def hyperband(
     best tracking, halving) is identical to the sequential path, so two runs
     whose objectives return the same scores produce the identical
     ``best_config`` and trial set.  When provided, ``objective`` may be None.
+
+    ``should_stop()`` is polled before every rung evaluation — the
+    server-driven hook (``repro.serve.MiloServer``) that lets a tuning
+    request honor a deadline or cancellation between rungs.  A True poll
+    ends the run immediately; the result carries ``stopped=True`` and the
+    best config among the rungs that completed (None if none did).
     """
     if objective is None and batched_objective is None:
         raise ValueError("provide objective or batched_objective")
@@ -172,12 +183,18 @@ def hyperband(
     history: list[tuple[dict, float]] = []
     best_config, best_score = None, -np.inf
     total_epochs = 0
+    stopped = False
 
     for s in range(s_max, -1, -1):
+        if stopped:
+            break
         n = int(math.ceil((s_max + 1) / (s + 1) * eta ** s))
         r = max_budget * eta ** (-s)
         configs = [search.suggest(history) for _ in range(n)]
         for i in range(s + 1):
+            if should_stop is not None and should_stop():
+                stopped = True
+                break
             n_i = int(n * eta ** (-i))
             r_i = max(1, int(round(r * eta ** i)))
             if batched_objective is not None:
@@ -202,7 +219,7 @@ def hyperband(
                 # nothing left to halve; finish bracket with the survivor
                 continue
     return HyperbandResult(best_config, float(best_score), trials, total_epochs,
-                           time.time() - t0)
+                           time.time() - t0, stopped=stopped)
 
 
 def kendall_tau(a: np.ndarray, b: np.ndarray) -> float:

@@ -127,6 +127,40 @@ def test_fused_respects_log_every_and_weights(data):
         np.testing.assert_allclose(ha["loss"], hb["loss"], rtol=1e-6)
 
 
+def test_async_history_drain_bit_identical(data):
+    """ISSUE 6 satellite: the overlapped device→host metrics drain
+    (TrainerConfig.async_history, the default) produces history records
+    BIT-identical to the synchronous drain — same keys, same float bits,
+    same order, with eval records landing at the same positions — because
+    only the copy's wall-clock timing moves, never its content."""
+    feats, labs = data
+
+    def eval_fn(state):
+        return {"pnorm": jnp.sqrt(sum(
+            jnp.sum(l * l) for l in jax.tree.leaves(state.params)))}
+
+    histories = {}
+    for async_history in (True, False):
+        _, fused_pipe = _pipelines(feats, labs)
+        tcfg = TrainerConfig(epochs=3, log_every_steps=2,
+                             eval_every_epochs=1, async_history=async_history)
+        tr = Trainer(_STEP, fused_pipe, tcfg, fused=True, superstep=4,
+                     eval_fn=eval_fn)
+        assert tr.fused_active()
+        tr.fit(_init_state(), resume=False)
+        histories[async_history] = tr.history
+
+    a, b = histories[True], histories[False]
+    assert len(a) == len(b) and len(a) > 0
+    assert any("eval" in h for h in a)
+    for ha, hb in zip(a, b):
+        assert set(ha) == set(hb)
+        for key in ha:
+            if key == "wall":
+                continue  # the only observable allowed to move
+            assert ha[key] == hb[key], (key, ha, hb)
+
+
 def test_fused_wrap_padded_remainder_matches_loop(data):
     """drop_remainder=False wrap-pads the final short batch identically on
     both paths."""

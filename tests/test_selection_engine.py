@@ -420,6 +420,58 @@ def test_lazy_greedy_requires_hooks():
         lazy_greedy(graph_cut, K, 4, budget=8)
 
 
+def test_lazy_verify_argmax_restores_exact_near_ties():
+    """CELF re-verification (verify_argmax=True): force the documented
+    sub-ulp failure mode — cached-gain drift flipping an exact near-tie —
+    and check the verified engine matches eager greedy bit-for-bit.
+
+    Rows 12 and 40 are exact duplicates, so their true FL gains are
+    bit-equal at every step and eager argmax always takes the LOWER index.
+    A drifting ``delta_gains`` hook bumps the higher duplicate's cached
+    gain by ~2 float32 ulps per lazy step, so the plain cached engine picks
+    40 over 12 when the pair reaches the argmax; exact shortlist
+    re-verification restores greedy's trajectory exactly (indices AND
+    gains)."""
+    from repro.core.submodular import LazyHooks, _fl_delta_gains
+
+    n, d, k = 64, 8, 40
+    rng = np.random.default_rng(11)
+    z = rng.normal(size=(n, d)).astype(np.float32)
+    z[40] = z[12]
+    K = gram_matrix(jnp.asarray(z))
+    bump = (jnp.arange(n) == 40).astype(jnp.float32) * 1e-6
+
+    def drifting_delta(Km, rows, c_old, c_new):
+        return _fl_delta_gains(Km, rows, c_old, c_new) + bump
+
+    fn_drift = dataclasses.replace(
+        facility_location, name="fl_drifting",
+        lazy=LazyHooks(cover=lambda c: c, delta_gains=drifting_delta),
+    )
+
+    a = greedy(facility_location, K, k)
+    ia = np.asarray(a.indices).tolist()
+    assert 12 in ia, "fixture: the duplicate pair must be reached"
+    # budget=n keeps every step on the lazy path, so the injected drift is
+    # never reset by a full-recompute fallback
+    plain = lazy_greedy(fn_drift, K, k, budget=n)
+    assert np.asarray(plain.indices).tolist() != ia, (
+        "fixture: the drift must actually flip the near-tie")
+    ver = lazy_greedy(fn_drift, K, k, budget=n, verify_argmax=True)
+    np.testing.assert_array_equal(np.asarray(ver.indices), np.asarray(a.indices))
+    # gains are the exact re-evaluated ones: equal to greedy's to the
+    # reduction-order ulp (the gather and full-matrix reductions may
+    # round differently), nowhere near the injected drift
+    np.testing.assert_allclose(np.asarray(ver.gains), np.asarray(a.gains),
+                               rtol=3e-7, atol=1e-9)
+    # the un-drifted engine also survives verification unchanged
+    ver2 = lazy_greedy(facility_location, K, k, budget=n // 4,
+                       verify_argmax=True)
+    np.testing.assert_array_equal(np.asarray(ver2.indices), np.asarray(a.indices))
+    np.testing.assert_allclose(np.asarray(ver2.gains), np.asarray(a.gains),
+                               rtol=3e-7, atol=1e-9)
+
+
 def test_lazy_budget_ignored_without_hooks():
     """greedy_importance(lazy_budget=...) on a hook-less function falls back
     to the eager pass instead of erroring (preprocessor wiring relies on it)."""

@@ -1,0 +1,400 @@
+"""Selection-as-a-service contracts (ISSUE 6): artifact store single-flight
+builds and reuse guards, LRU + pin eviction with bit-identical disk reloads,
+shared device-resident buffers across concurrent trainers, and the
+``MiloServer`` request lifecycle (submit/poll/result/cancel, deadlines,
+structured request log)."""
+import dataclasses
+import shutil
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.metadata import MetadataMismatchError
+from repro.selection import MiloSession, MiloSessionConfig
+from repro.serve import (
+    CANCELLED,
+    DONE,
+    ERROR,
+    EXPIRED,
+    ArtifactStore,
+    BufferRegistry,
+    MiloClient,
+    MiloServer,
+    artifact_request_config,
+)
+
+N, D, CLASSES = 240, 8, 3
+
+
+def _dataset(seed: int = 0):
+    rng = np.random.default_rng(seed)
+    labs = rng.integers(0, CLASSES, N).astype(np.int64)
+    feats = (rng.normal(size=(N, D)) + 0.8 * labs[:, None]).astype(np.float32)
+    vx = (rng.normal(size=(48, D))).astype(np.float32)
+    vy = rng.integers(0, CLASSES, 48).astype(np.int64)
+    return feats, labs, vx, vy
+
+
+def _config(**kw) -> MiloSessionConfig:
+    base = dict(subset_fraction=0.2, n_sge_subsets=2, gram_free=True,
+                total_epochs=4, eval_every_epochs=2, sub_steps=2,
+                fused_training=True)
+    base.update(kw)
+    return MiloSessionConfig(**base)
+
+
+def _build_fn(cfg: MiloSessionConfig, feats, labs, fp):
+    session = MiloSession(cfg)
+    return lambda: session.build_metadata(feats, labs, fingerprint=fp)
+
+
+# ---------------------------------------------------------------------------
+# artifact store
+# ---------------------------------------------------------------------------
+
+def test_store_single_flight_concurrent_builds(tmp_path):
+    """N concurrent requests for one missing key trigger exactly ONE
+    preprocessing run; every waiter gets the same decoded object."""
+    feats, labs, _, _ = _dataset()
+    cfg = _config()
+    store = ArtifactStore(str(tmp_path / "store"))
+    req = artifact_request_config(cfg)
+    session = MiloSession(cfg)
+    fp = "f" * 16
+    key = store.key_for(fp, req)
+    calls, results, errors = [], [], []
+
+    def build():
+        calls.append(1)
+        time.sleep(0.05)  # widen the race window
+        return session.build_metadata(feats, labs, fingerprint=fp)
+
+    def worker():
+        try:
+            md, entry, source = store.get_or_build(key, req, build)
+            results.append((md, source))
+        except BaseException as e:  # pragma: no cover - fail loudly below
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker) for _ in range(6)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    assert len(calls) == 1 and store.builds == 1
+    assert len(results) == 6
+    mds = {id(md) for md, _ in results}
+    assert len(mds) == 1, "all waiters must share the one built artifact"
+    assert sorted(s for _, s in results) == ["built"] + ["memory"] * 5
+
+
+def test_store_foreign_artifact_raises_mismatch(tmp_path):
+    """A file parked at a key's path whose stored config disagrees with the
+    request is refused (MetadataMismatchError), never silently served."""
+    feats, labs, _, _ = _dataset()
+    cfg_a, cfg_b = _config(subset_fraction=0.2), _config(subset_fraction=0.1)
+    store = ArtifactStore(str(tmp_path / "store"))
+    fp = "a" * 16
+    req_a = artifact_request_config(cfg_a)
+    key_a = store.key_for(fp, req_a)
+    store.get_or_build(key_a, req_a, _build_fn(cfg_a, feats, labs, fp))
+
+    req_b = artifact_request_config(cfg_b)
+    key_b = store.key_for(fp, req_b)
+    assert key_a != key_b
+    # adversarial setup: artifact A masquerading under B's key on disk
+    shutil.copy(store.path_for(key_a), store.path_for(key_b))
+    fresh = ArtifactStore(store.root)  # cold memory tier -> must hit disk
+    with pytest.raises(MetadataMismatchError, match="subset_fraction"):
+        fresh.get_or_build(key_b, req_b, _build_fn(cfg_b, feats, labs, fp))
+
+
+def test_store_wrong_fingerprint_raises_mismatch(tmp_path):
+    """Same config but different data: the recorded fingerprint guard."""
+    feats, labs, _, _ = _dataset()
+    cfg = _config()
+    store = ArtifactStore(str(tmp_path / "store"))
+    req = artifact_request_config(cfg)
+    key1 = store.key_for("1" * 16, req)
+    store.get_or_build(key1, req, _build_fn(cfg, feats, labs, "1" * 16))
+    key2 = store.key_for("2" * 16, req)
+    shutil.copy(store.path_for(key1), store.path_for(key2))
+    fresh = ArtifactStore(store.root)
+    with pytest.raises(MetadataMismatchError, match="fingerprint"):
+        fresh.get_or_build(key2, req, _build_fn(cfg, feats, labs, "2" * 16))
+
+
+def test_store_evict_reload_bit_identical_plans(tmp_path):
+    """LRU eviction drops only the memory tier: the next request reloads
+    from disk and the selection plans it produces are BIT-identical to the
+    original build's."""
+    cfg = _config()
+    store = ArtifactStore(str(tmp_path / "store"), capacity=1)
+    req = artifact_request_config(cfg)
+    sessions, keys, built = {}, {}, {}
+    for seed in (0, 1):
+        feats, labs, _, _ = _dataset(seed)
+        fp = f"{seed}" * 16
+        key = store.key_for(fp, req)
+        md, _, source = store.get_or_build(
+            key, req, _build_fn(cfg, feats, labs, fp))
+        assert source == "built"
+        keys[seed], built[seed] = key, md
+        sess = MiloSession(cfg)
+        sess.adopt_metadata(md)
+        sessions[seed] = sess
+    # capacity=1: building seed 1 evicted seed 0 from memory, not disk
+    assert store.evictions == 1
+    assert not store.resident(keys[0]) and store.resident(keys[1])
+
+    md0, entry, source = store.get_or_build(
+        keys[0], req, lambda: pytest.fail("reload must not rebuild"))
+    assert source == "disk" and store.disk_loads == 1 and store.builds == 2
+    assert entry.version == 1
+    np.testing.assert_array_equal(md0.sge_subsets, built[0].sge_subsets)
+    np.testing.assert_array_equal(md0.wre_probs, built[0].wre_probs)
+    np.testing.assert_array_equal(md0.wre_importance, built[0].wre_importance)
+
+    reloaded = MiloSession(cfg)
+    reloaded.adopt_metadata(md0)
+    for epoch in (0, 3):
+        a = sessions[0].selector(n=N).plan(epoch)
+        b = reloaded.selector(n=N).plan(epoch)
+        np.testing.assert_array_equal(a.indices, b.indices)
+        np.testing.assert_array_equal(a.weights, b.weights)
+        assert a.phase == b.phase
+
+
+def test_store_pinned_entries_survive_eviction(tmp_path):
+    cfg = _config()
+    store = ArtifactStore(str(tmp_path / "store"), capacity=1)
+    req = artifact_request_config(cfg)
+    feats, labs, _, _ = _dataset()
+    key1 = store.key_for("p" * 16, req)
+    store.get_or_build(key1, req, _build_fn(cfg, feats, labs, "p" * 16),
+                       pin=True)
+    key2 = store.key_for("q" * 16, req)
+    store.get_or_build(key2, req, _build_fn(cfg, feats, labs, "q" * 16))
+    assert store.resident(key1), "pinned entry must never be evicted"
+    store.unpin(key1)
+    key3 = store.key_for("r" * 16, req)
+    store.get_or_build(key3, req, _build_fn(cfg, feats, labs, "r" * 16))
+    assert not store.resident(key1)
+
+
+def test_store_force_bumps_version(tmp_path):
+    cfg = _config()
+    store = ArtifactStore(str(tmp_path / "store"))
+    req = artifact_request_config(cfg)
+    feats, labs, _, _ = _dataset()
+    fp = "v" * 16
+    key = store.key_for(fp, req)
+    _, e1, _ = store.get_or_build(key, req, _build_fn(cfg, feats, labs, fp))
+    _, e2, s2 = store.get_or_build(key, req, _build_fn(cfg, feats, labs, fp))
+    assert (e1.version, e2.version, s2) == (1, 1, "memory")
+    _, e3, s3 = store.get_or_build(key, req, _build_fn(cfg, feats, labs, fp),
+                                   force=True)
+    assert (e3.version, s3) == (2, "built")
+
+
+# ---------------------------------------------------------------------------
+# shared device buffers
+# ---------------------------------------------------------------------------
+
+def test_buffer_registry_identity_and_put_counting():
+    reg = BufferRegistry()
+    x = np.arange(24, dtype=np.float32).reshape(6, 4)
+    b1 = reg.column(x)
+    b2 = reg.column(x)                    # identity fast path
+    b3 = reg.column(x.copy())             # equal content, different object
+    assert b1 is b2 is b3
+    assert reg.put_count == 1 and reg.hits == 2
+    y = x + 1.0
+    assert reg.column(y) is not b1 and reg.put_count == 2
+
+
+def test_concurrent_trainers_share_one_device_buffer():
+    """Two fused Trainers over the same dataset (server path: sessions with
+    a shared BufferRegistry) hold the SAME device buffer object per column —
+    one device_put total, counted by the registry."""
+    feats, labs, vx, vy = _dataset()
+    reg = BufferRegistry()
+    reports = []
+    for seed in (0, 1):
+        sess = MiloSession(_config(), buffer_registry=reg)
+        sess.preprocess(feats, labs)
+        reports.append(sess.train(feats, labs, test_x=vx, test_y=vy, seed=seed))
+    assert all(r.steps > 0 for r in reports)
+    stats = reg.stats()
+    assert stats["put_count"] == 2, "one placement per column (x, y), ever"
+    assert stats["resident_columns"] == 2
+    assert stats["hits"] >= 2, "second trainer reused both columns"
+    # the registry's resident buffers ARE shared by identity
+    a = reg.get({"x": feats, "y": labs})
+    b = reg.get({"x": feats, "y": labs})
+    assert a["x"] is b["x"] and a["y"] is b["y"]
+    assert reg.put_count == 2
+
+
+# ---------------------------------------------------------------------------
+# server lifecycle
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def warm_server(tmp_path_factory):
+    feats, labs, vx, vy = _dataset()
+    server = MiloServer(
+        _config(), store_root=str(tmp_path_factory.mktemp("artifacts")),
+        num_workers=2,
+    ).start()
+    server.warm(feats, labs)
+    yield server, (feats, labs, vx, vy)
+    server.shutdown()
+
+
+def test_server_concurrent_identical_submits_build_once(warm_server):
+    """The serving half of single-flight: concurrent identical tune submits
+    resolve to one artifact (no rebuild — the warm() build is the only one)
+    and every request succeeds against the shared cache."""
+    server, (feats, labs, vx, vy) = warm_server
+    space = {"lr": ("log", 1e-3, 0.3)}
+    builds_before = server.store.builds
+    # per-tenant SEARCH seeds go through the tune payload; a config-level
+    # seed override would (correctly) change the prep seed and thus the
+    # artifact key — tenants may not share artifacts across prep seeds
+    rids = [
+        server.submit("tune", features=feats, labels=labs, val_x=vx,
+                      val_y=vy, space=space, max_budget=3, tenant=f"t{i}",
+                      seed=50 + i)
+        for i in range(3)
+    ]
+    results = [server.result(rid, timeout=300) for rid in rids]
+    assert server.store.builds == builds_before, "no request may rebuild"
+    for rid, res in zip(rids, results):
+        row = server.poll(rid)
+        assert row["status"] == DONE
+        assert row["artifact_source"] == "memory"
+        assert res.best_config is not None and not res.stopped
+
+
+def test_server_train_and_log(warm_server):
+    server, (feats, labs, vx, vy) = warm_server
+    client = MiloClient(server, tenant="trainer")
+    report = client.train(feats, labs, test_x=vx, test_y=vy)
+    assert report.steps > 0
+    rows = server.request_log()
+    assert rows, "every completed request logs one structured row"
+    last = rows[-1]
+    assert {"request_id", "kind", "tenant", "status", "artifact_key",
+            "artifact_version", "artifact_source", "submitted", "started",
+            "finished"} <= set(last)
+    assert last["kind"] == "train" and last["tenant"] == "trainer"
+    assert last["status"] == DONE and last["finished"] >= last["started"]
+
+
+def test_server_cancel_queued_request(warm_server):
+    server, (feats, labs, vx, vy) = warm_server
+    space = {"lr": ("log", 1e-3, 0.3)}
+    # saturate both workers so the victim stays queued long enough to cancel
+    blockers = [
+        server.submit("tune", features=feats, labels=labs, val_x=vx,
+                      val_y=vy, space=space, max_budget=9)
+        for _ in range(2)
+    ]
+    victim = server.submit("train", features=feats, labels=labs,
+                           test_x=vx, test_y=vy)
+    assert server.cancel(victim)
+    with pytest.raises(TimeoutError, match="cancelled"):
+        server.result(victim, timeout=300)
+    assert server.poll(victim)["status"] == CANCELLED
+    for rid in blockers:
+        server.result(rid, timeout=300)
+    assert not server.cancel(victim), "terminal requests cannot be cancelled"
+
+
+def test_server_deadline_expires_queued_request(warm_server):
+    server, (feats, labs, vx, vy) = warm_server
+    space = {"lr": ("log", 1e-3, 0.3)}
+    blockers = [
+        server.submit("tune", features=feats, labels=labs, val_x=vx,
+                      val_y=vy, space=space, max_budget=9)
+        for _ in range(2)
+    ]
+    doomed = server.submit("train", features=feats, labels=labs,
+                           test_x=vx, test_y=vy, deadline=0.0)
+    with pytest.raises(TimeoutError, match="expired"):
+        server.result(doomed, timeout=300)
+    assert server.poll(doomed)["status"] == EXPIRED
+    for rid in blockers:
+        server.result(rid, timeout=300)
+
+
+def test_server_tune_should_stop_at_rung_boundary(warm_server):
+    """A cancelled running tune stops at the next hyperband rung: the
+    underlying hyperband result records stopped=True."""
+    server, (feats, labs, vx, vy) = warm_server
+    from repro.tuning.tuner import RandomSearch, hyperband
+
+    calls = []
+
+    def objective(cfg, budget):
+        calls.append(1)
+        return 0.5
+
+    res = hyperband(objective, RandomSearch({"lr": ("log", 1e-3, 0.3)}),
+                    max_budget=9, should_stop=lambda: len(calls) > 0)
+    assert res.stopped and len(res.trials) == len(calls)
+    # and the server surfaces a stopped tune as EXPIRED/CANCELLED, keeping
+    # the partial result on the request record
+    rid = server.submit("tune", features=feats, labels=labs, val_x=vx,
+                        val_y=vy, space={"lr": ("log", 1e-3, 0.3)},
+                        max_budget=9, deadline=1e-3)
+    with pytest.raises(TimeoutError):
+        server.result(rid, timeout=300)
+    req = server._request(rid)
+    assert req.status in (EXPIRED, CANCELLED)
+    assert req.result is None or req.result.stopped
+
+
+def test_server_error_requests_reraise(warm_server):
+    server, (feats, labs, vx, vy) = warm_server
+    rid = server.submit("tune", features=feats, labels=labs, val_x=vx,
+                        val_y=vy, space={"bogus": ("log", 1e-3, 1.0)})
+    with pytest.raises(ValueError, match="bogus"):
+        server.result(rid, timeout=300)
+    assert server.poll(rid)["status"] == ERROR
+
+
+def test_server_rejects_unknown_kind(warm_server):
+    server, (feats, labs, _, _) = warm_server
+    with pytest.raises(ValueError, match="unknown request kind"):
+        server.submit("frobnicate", features=feats, labels=labs)
+
+
+def test_adopt_metadata_guards_config(tmp_path):
+    feats, labs, _, _ = _dataset()
+    md = MiloSession(_config()).build_metadata(feats, labs)
+    other = MiloSession(_config(subset_fraction=0.1))
+    with pytest.raises(MetadataMismatchError, match="subset_fraction"):
+        other.adopt_metadata(md)
+    wrong_seed = MiloSession(_config(prep_seed=99))
+    with pytest.raises(MetadataMismatchError, match="prep_seed"):
+        wrong_seed.adopt_metadata(md)
+
+
+# ---------------------------------------------------------------------------
+# LM engine relocation shim
+# ---------------------------------------------------------------------------
+
+def test_lm_engine_shim_reexports():
+    """serve.engine stays importable after the move to serve.lm_engine."""
+    from repro.serve import engine as shim
+    from repro.serve import lm_engine
+
+    assert shim.ServeEngine is lm_engine.ServeEngine
+    assert shim.Request is lm_engine.Request
+    assert "prefilled" in (lm_engine.__doc__ or "")

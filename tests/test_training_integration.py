@@ -29,7 +29,7 @@ from repro.data.pipeline import FullSelector, Pipeline
 from repro.models import lm
 from repro.optim.optimizers import adamw, sgd_nesterov
 from repro.optim.schedules import cosine, cyclic, linear_decay
-from repro.serve.engine import Request, ServeEngine
+from repro.serve.lm_engine import Request, ServeEngine
 from repro.train.train_state import init_train_state, make_train_step
 from repro.train.trainer import Trainer, TrainerConfig
 from repro.tuning.tuner import RandomSearch, TPESearch, hyperband, kendall_tau
