@@ -1,20 +1,34 @@
-"""Sharded, atomic, async checkpointing with reshard-on-restore.
+"""Sharded, atomic, async, *crash-safe* checkpointing with reshard-on-restore.
 
 Design (1000+-node posture, §5 of DESIGN.md):
   * A checkpoint is a directory ``step_<N>/`` holding one ``shard_<i>.npz``
     per host plus a ``manifest.json`` (tree structure, global shapes, dtypes,
-    step, and a completion marker written LAST).
-  * Writes go to ``step_<N>.tmp/`` and are atomically renamed — a crash can
-    never yield a half-readable checkpoint, and restart logic simply takes
-    the newest directory with a valid manifest.
+    step, per-file sha256 checksums, and free-form ``extra`` run metadata),
+    written LAST.
+  * Writes go to ``step_<N>.tmp/`` and are atomically renamed; shard and
+    manifest files are fsync'd *before* the rename so a machine crash can
+    never publish a directory whose data pages were still in the page cache
+    (rename is metadata — without the fsync a torn shard can become visible
+    under a completed-looking name).
+  * Every file carries a sha256 in the manifest.  ``validate_step`` replays
+    them (plus shard-count and manifest-parse checks) and raises
+    ``CheckpointCorruptionError`` on any damage; ``latest_valid_step`` walks
+    newest-first and returns the first checkpoint that passes, so restart
+    logic transparently skips truncated / corrupted / half-lost steps.
+    ``restore`` validates by default before reading.
   * ``save_async`` snapshots device arrays to host memory synchronously
     (cheap) and does file I/O on a background thread so the training loop
-    keeps stepping.
+    keeps stepping.  ``wait()`` re-raises the worker's exception — an async
+    save failure is a failed save, not a warning.  In-flight steps are
+    registered before the thread starts and excluded from garbage
+    collection, so a concurrent ``save``'s GC can never delete a checkpoint
+    whose write has not finished (the GC/async race).
   * ``restore`` takes a *target sharding* pytree: arrays are re-laid-out onto
     whatever mesh the restarted job has (elastic up/down-scaling: the new
     mesh may have a different device count).
   * ``keep_last`` old checkpoints are garbage-collected after a successful
-    save.
+    save; the keep window counts in-flight steps so a burst of overlapping
+    saves cannot over-delete.
 
 On a single-process CPU container every array is fully addressable so there
 is exactly one shard file; the shard-per-host layout and the manifest format
@@ -23,6 +37,7 @@ are what a multi-host deployment needs (each host writes
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import re
@@ -35,6 +50,33 @@ import jax
 import numpy as np
 
 _STEP_RE = re.compile(r"^step_(\d+)$")
+
+#: manifest format carrying per-file checksums + extra run metadata
+MANIFEST_FORMAT = 2
+
+
+class CheckpointCorruptionError(RuntimeError):
+    """A checkpoint directory exists but fails validation (torn shard,
+    unparseable manifest, missing file, checksum mismatch)."""
+
+
+def _sha256_file(path: str, chunk: int = 1 << 20) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        while True:
+            b = f.read(chunk)
+            if not b:
+                break
+            h.update(b)
+    return h.hexdigest()
+
+
+def _fsync_write(path: str, write_fn) -> None:
+    """Write ``path`` through ``write_fn(file)`` and fsync it to disk."""
+    with open(path, "wb") as f:
+        write_fn(f)
+        f.flush()
+        os.fsync(f.fileno())
 
 
 def _flatten(tree: Any) -> tuple[list[str], list[Any]]:
@@ -63,29 +105,57 @@ class CheckpointManager:
         os.makedirs(directory, exist_ok=True)
         self._thread: threading.Thread | None = None
         self._error: BaseException | None = None
+        # guards _inflight and serializes GC decisions across the async
+        # worker and concurrent synchronous saves
+        self._lock = threading.Lock()
+        self._inflight: set[int] = set()
 
     # -- save ---------------------------------------------------------------
 
-    def save(self, step: int, tree: Any) -> str:
-        """Synchronous atomic save; returns the checkpoint path."""
-        host_tree = jax.tree.map(lambda a: np.asarray(a), tree)
-        return self._write(step, host_tree)
+    def save(self, step: int, tree: Any, *, extra: dict | None = None) -> str:
+        """Synchronous atomic save; returns the checkpoint path.
 
-    def save_async(self, step: int, tree: Any) -> None:
-        """Snapshot to host now, write on a background thread."""
-        self.wait()  # one in-flight save at a time
+        ``extra`` is free-form JSON-able run metadata stored in the manifest
+        (e.g. the saving run's device count, for elastic-restart planning).
+        """
         host_tree = jax.tree.map(lambda a: np.asarray(a), tree)
+        with self._lock:
+            self._inflight.add(step)
+        try:
+            return self._write(step, host_tree, extra)
+        finally:
+            with self._lock:
+                self._inflight.discard(step)
+
+    def save_async(self, step: int, tree: Any, *, extra: dict | None = None) -> None:
+        """Snapshot to host now, write on a background thread.
+
+        The step is registered in-flight *before* the thread starts, so a
+        concurrent save's garbage collection can never delete it mid-write.
+        """
+        self.wait()  # one in-flight async save at a time
+        host_tree = jax.tree.map(lambda a: np.asarray(a), tree)
+        with self._lock:
+            self._inflight.add(step)
 
         def work():
             try:
-                self._write(step, host_tree)
-            except BaseException as e:  # surfaced on next wait()
+                self._write(step, host_tree, extra)
+            except BaseException as e:  # re-raised on next wait()
                 self._error = e
+            finally:
+                with self._lock:
+                    self._inflight.discard(step)
 
         self._thread = threading.Thread(target=work, daemon=True)
         self._thread.start()
 
     def wait(self) -> None:
+        """Join the in-flight async save and RE-RAISE its exception, if any.
+
+        A swallowed write error would let training continue believing a
+        checkpoint exists; the failure must surface on the training thread.
+        """
         if self._thread is not None:
             self._thread.join()
             self._thread = None
@@ -93,7 +163,7 @@ class CheckpointManager:
             err, self._error = self._error, None
             raise err
 
-    def _write(self, step: int, host_tree: Any) -> str:
+    def _write(self, step: int, host_tree: Any, extra: dict | None = None) -> str:
         names, leaves = _flatten(host_tree)
         final = os.path.join(self.directory, f"step_{step}")
         tmp = final + ".tmp"
@@ -101,31 +171,109 @@ class CheckpointManager:
             shutil.rmtree(tmp)
         os.makedirs(tmp)
         shard_id = jax.process_index() if jax.process_count() > 1 else 0
-        np.savez(os.path.join(tmp, f"shard_{shard_id}.npz"),
-                 **{n: l for n, l in zip(names, leaves)})
+        shard_name = f"shard_{shard_id}.npz"
+        shard_path = os.path.join(tmp, shard_name)
+        _fsync_write(shard_path, lambda f: np.savez(
+            f, **{n: l for n, l in zip(names, leaves)}))
         manifest = {
+            "format": MANIFEST_FORMAT,
             "step": step,
             "time": time.time(),
             "num_shards": max(1, jax.process_count()),
             "leaves": {n: {"shape": list(np.shape(l)), "dtype": str(np.asarray(l).dtype)}
                        for n, l in zip(names, leaves)},
+            # checksums cover every data file; the manifest itself is the
+            # completion marker (written+fsync'd last, then the dir rename)
+            "checksums": {shard_name: _sha256_file(shard_path)},
+            "extra": dict(extra) if extra else {},
         }
-        with open(os.path.join(tmp, "manifest.json"), "w") as f:
-            json.dump(manifest, f)
+        _fsync_write(os.path.join(tmp, "manifest.json"),
+                     lambda f: f.write(json.dumps(manifest).encode()))
         if os.path.exists(final):
             shutil.rmtree(final)
         os.replace(tmp, final)
+        # fsync the parent directory so the rename itself is durable
+        dirfd = os.open(self.directory, os.O_RDONLY)
+        try:
+            os.fsync(dirfd)
+        finally:
+            os.close(dirfd)
         self._gc()
         return final
 
     def _gc(self) -> None:
-        steps = sorted(self.all_steps())
-        for s in steps[: -self.keep_last] if self.keep_last else []:
-            shutil.rmtree(os.path.join(self.directory, f"step_{s}"), ignore_errors=True)
+        if not self.keep_last:
+            return
+        with self._lock:
+            inflight = set(self._inflight)
+        steps = self.all_steps()
+        # the keep window is computed over completed AND in-flight steps so
+        # overlapping saves cannot over-delete, and an in-flight step is
+        # never a deletion candidate whatever its age
+        known = sorted(set(steps) | inflight)
+        keep = set(known[-self.keep_last:]) | inflight
+        for s in steps:
+            if s not in keep:
+                shutil.rmtree(os.path.join(self.directory, f"step_{s}"),
+                              ignore_errors=True)
+
+    # -- validation ---------------------------------------------------------
+
+    def manifest(self, step: int) -> dict:
+        """Parse and return the manifest of checkpoint ``step`` (raises
+        ``CheckpointCorruptionError`` if missing or unparseable)."""
+        path = os.path.join(self.directory, f"step_{step}", "manifest.json")
+        try:
+            with open(path) as f:
+                return json.load(f)
+        except FileNotFoundError:
+            raise CheckpointCorruptionError(f"{path}: manifest missing")
+        except (json.JSONDecodeError, UnicodeDecodeError, OSError) as e:
+            raise CheckpointCorruptionError(f"{path}: manifest unreadable ({e})")
+
+    def validate_step(self, step: int) -> dict:
+        """Full integrity check of one checkpoint; returns its manifest.
+
+        Raises ``CheckpointCorruptionError`` when the manifest is torn, a
+        shard file is missing, or a file's sha256 disagrees with the
+        manifest — every way a crash, a lost page, or silent media
+        corruption can damage a published checkpoint.  Format-1 manifests
+        (no checksums) validate on shard presence alone.
+        """
+        path = os.path.join(self.directory, f"step_{step}")
+        manifest = self.manifest(step)
+        shards = [f for f in os.listdir(path)
+                  if f.startswith("shard_") and f.endswith(".npz")]
+        want_shards = int(manifest.get("num_shards", 1))
+        if len(shards) < want_shards:
+            raise CheckpointCorruptionError(
+                f"{path}: {len(shards)} shard file(s) present, manifest "
+                f"promises {want_shards}"
+            )
+        for fn, want in manifest.get("checksums", {}).items():
+            fpath = os.path.join(path, fn)
+            if not os.path.exists(fpath):
+                raise CheckpointCorruptionError(f"{path}: {fn} missing")
+            got = _sha256_file(fpath)
+            if got != want:
+                raise CheckpointCorruptionError(
+                    f"{path}: checksum mismatch on {fn} "
+                    f"(manifest {want[:12]}…, file {got[:12]}…)"
+                )
+        return manifest
+
+    def is_valid_step(self, step: int) -> bool:
+        try:
+            self.validate_step(step)
+            return True
+        except CheckpointCorruptionError:
+            return False
 
     # -- restore ------------------------------------------------------------
 
     def all_steps(self) -> list[int]:
+        """Steps with a manifest on disk — *candidates*, not guarantees;
+        use ``latest_valid_step``/``validate_step`` before trusting one."""
         out = []
         for d in os.listdir(self.directory):
             m = _STEP_RE.match(d)
@@ -137,18 +285,38 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
-    def restore(self, step: int, target: Any, shardings: Any | None = None) -> Any:
+    def latest_valid_step(self) -> int | None:
+        """Newest step that passes full validation; torn / corrupted /
+        partially deleted checkpoints are skipped, so restart logic always
+        lands on a checkpoint that will actually restore."""
+        for step in reversed(self.all_steps()):
+            if self.is_valid_step(step):
+                return step
+        return None
+
+    def restore(
+        self,
+        step: int,
+        target: Any,
+        shardings: Any | None = None,
+        *,
+        verify: bool = True,
+    ) -> Any:
         """Restore into the structure of ``target``; re-shard if asked.
 
         ``target`` provides the pytree structure (values ignored);
         ``shardings`` (same structure, NamedSharding leaves) lays leaves out
         on the current mesh — which may differ from the saving mesh
-        (elastic restart).
+        (elastic restart).  With ``verify`` (default) the checkpoint's
+        checksums are validated first, so corruption surfaces as
+        ``CheckpointCorruptionError`` instead of a garbage state.
         """
         path = os.path.join(self.directory, f"step_{step}")
         names, _ = _flatten(target)
-        with open(os.path.join(path, "manifest.json")) as f:
-            manifest = json.load(f)
+        if verify:
+            manifest = self.validate_step(step)
+        else:
+            manifest = self.manifest(step)
         data = {}
         for fn in os.listdir(path):
             if fn.startswith("shard_") and fn.endswith(".npz"):
@@ -163,6 +331,12 @@ class CheckpointManager:
 
                             arr = arr.view(np.dtype(getattr(ml_dtypes, want, want)))
                         data[n] = arr
+        missing = [n for n in names if n not in data]
+        if missing:
+            raise CheckpointCorruptionError(
+                f"{path}: leaves missing from shard files: {missing[:4]}"
+                f"{'…' if len(missing) > 4 else ''}"
+            )
         leaves = [data[n] for n in names]
         restored = jax.tree_util.tree_unflatten(
             jax.tree_util.tree_structure(target), leaves

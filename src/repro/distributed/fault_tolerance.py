@@ -46,7 +46,13 @@ class StragglerMonitor:
     def observe(self, step: int, dt: float) -> bool:
         self._n += 1
         if self._n <= self.warmup_steps:
-            self._mean = dt if self._n == 1 else (self._mean + dt) / 2.0
+            # Welford running mean/variance over the warmup window.  The old
+            # ``(mean + dt) / 2`` halved every previous observation's weight
+            # each step — an exponentially-biased average that let one slow
+            # early step dominate the baseline the z-score compares against.
+            d = dt - self._mean
+            self._mean += d / self._n
+            self._var += (d * (dt - self._mean) - self._var) / self._n
             return False
         slow = False
         std = self._var ** 0.5
@@ -111,9 +117,20 @@ def elastic_plan(
 
 
 def restart_state(seed: int, step: int, steps_per_epoch: int) -> dict:
-    """Deterministic cursor for resume: everything derives from (seed, step)."""
+    """Deterministic cursor for resume: everything derives from (seed, step).
+
+    ``data_seed`` is the epoch's permutation seed exactly as
+    ``data.pipeline.Pipeline._permuted`` derives it (``seed * 1_000_003 +
+    epoch``) — the two MUST agree, or a restart driven by this cursor would
+    replay a different batch order than the run it is resuming.  The old
+    independent derivation (``seed + epoch * 1_000_003``) disagreed with the
+    pipeline for every ``seed > 0``.
+    """
+    if steps_per_epoch < 1:
+        raise ValueError(f"steps_per_epoch must be >= 1, got {steps_per_epoch}")
+    epoch = step // steps_per_epoch
     return {
-        "epoch": step // steps_per_epoch,
+        "epoch": epoch,
         "step_in_epoch": step % steps_per_epoch,
-        "data_seed": seed + (step // steps_per_epoch) * 1_000_003,
+        "data_seed": seed * 1_000_003 + epoch,
     }

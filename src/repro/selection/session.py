@@ -675,6 +675,7 @@ class MiloSession:
         seed: int | None = None,
         batched_objective: Any | None = None,
         should_stop: Any | None = None,
+        checkpoint: str | None = None,
         **selector_kwargs: Any,
     ) -> HyperbandResult:
         """Hyperband over ``space`` with registry-selected subsets powering
@@ -687,7 +688,11 @@ class MiloSession:
         ``hidden``); trials fall back to the sequential per-config loop
         otherwise.  ``should_stop()`` is polled before every rung (see
         ``tuning.hyperband``) — the serving layer's cancellation/deadline
-        hook; an early stop returns ``stopped=True``."""
+        hook; an early stop returns ``stopped=True``.  ``checkpoint`` names a
+        JSON rung-state file making the sweep crash-safe: a killed sweep
+        relaunched with the same arguments resumes at its rung boundary and
+        reproduces the identical trial stream and ``best_config`` (see
+        ``tuning.hyperband``)."""
         cfg = self.config
         seed = seed if seed is not None else cfg.seed
         tunable = {"lr", "hidden"}
@@ -721,4 +726,4 @@ class MiloSession:
         objective = subset_objective(train_fn, selector_factory)
         return hyperband(objective, search_obj, max_budget=max_budget, eta=eta,
                          batched_objective=batched_objective,
-                         should_stop=should_stop)
+                         should_stop=should_stop, checkpoint=checkpoint)

@@ -3,7 +3,8 @@
 * ``MiloServer`` / ``MiloClient`` — persistent multi-tenant selection
   server: versioned artifact store, warm compiled-program pool, shared
   device buffers, worker-thread request lifecycle (submit/poll/result/
-  cancel, deadlines, structured request log).
+  cancel, deadlines, transient-failure retry under ``RetryPolicy``,
+  structured request log).
 * ``ArtifactStore`` — (data_fingerprint, config_hash)-keyed two-tier
   (memory LRU + disk) ``MiloMetadata`` store with single-flight builds,
   pinning, and per-key versions.
@@ -22,7 +23,9 @@ from repro.serve.server import (
     RUNNING,
     MiloClient,
     MiloServer,
+    RetryPolicy,
     ServeRequest,
+    TransientServeError,
     artifact_request_config,
 )
 from repro.serve.store import ArtifactEntry, ArtifactKey, ArtifactStore
@@ -34,7 +37,9 @@ __all__ = [
     "BufferRegistry",
     "MiloClient",
     "MiloServer",
+    "RetryPolicy",
     "ServeRequest",
+    "TransientServeError",
     "array_fingerprint",
     "artifact_request_config",
     "QUEUED",

@@ -20,7 +20,10 @@ a long-lived process that N tenants submit train/tune requests to, where
     each dataset column on device once, shared by every concurrent Trainer;
   * the **request lifecycle** layer runs submissions on worker threads with
     per-request deadlines and cancellation (polled between hyperband rungs
-    via ``should_stop``) and appends one structured row per request to the
+    via ``should_stop``), classifies failures transient-vs-permanent and
+    retries transient ones under ``RetryPolicy`` (exponential backoff with
+    deterministic jitter, interruptible by cancel), and appends one
+    structured row per request — including its attempt count — to the
     request log.
 
 ``MiloClient`` is the thin synchronous facade a tenant holds; the transport
@@ -31,6 +34,7 @@ semantics.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import itertools
 import queue
 import threading
@@ -60,6 +64,59 @@ def _with_overrides(
     ov = dict(overrides)
     ov["metadata_path"] = None
     return dataclasses.replace(cfg, **ov)
+
+class TransientServeError(RuntimeError):
+    """An error the server should retry: the failure is a property of the
+    attempt (a flaky artifact build, a contended resource), not of the
+    request.  Raise it — or any exception carrying a truthy ``transient``
+    attribute — from a handler to opt into the retry policy."""
+
+    transient = True
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Exponential backoff with deterministic jitter for transient failures.
+
+    Attempt ``k`` (1-indexed) that fails transiently sleeps
+    ``min(max_delay, base_delay * 2**(k-1)) * (1 + jitter * u)`` before the
+    next try, where ``u ∈ [0, 1)`` is derived by hashing
+    ``(request_id, attempt)`` — jittered like production backoff (no
+    thundering herd of identical schedules) yet bit-reproducible across
+    runs, which is what lets the fault suite assert exact retry behavior.
+    The backoff sleep waits on the request's cancel event, so cancellation
+    interrupts it immediately.
+
+    ``retry_on`` lists the exception types classified transient; any
+    exception with a truthy ``transient`` attribute also qualifies (the
+    duck-typed escape hatch for errors the server does not know by type).
+    Everything else is permanent and fails the request on first raise.
+    """
+
+    max_attempts: int = 3
+    base_delay: float = 0.05
+    max_delay: float = 2.0
+    jitter: float = 0.25
+    retry_on: tuple = (TransientServeError, ConnectionError, TimeoutError)
+
+    def __post_init__(self):
+        if self.max_attempts < 1:
+            raise ValueError(f"max_attempts must be >= 1, got {self.max_attempts}")
+
+    def is_transient(self, exc: BaseException) -> bool:
+        return isinstance(exc, self.retry_on) or bool(
+            getattr(exc, "transient", False))
+
+    def delay(self, request_id: str, attempt: int) -> float:
+        """Backoff before attempt ``attempt + 1``; deterministic per
+        (request, attempt)."""
+        base = min(self.max_delay, self.base_delay * (2 ** (attempt - 1)))
+        if self.jitter <= 0:
+            return base
+        digest = hashlib.sha256(f"{request_id}:{attempt}".encode()).digest()
+        u = int.from_bytes(digest[:8], "little") / 2.0 ** 64
+        return base * (1.0 + self.jitter * u)
+
 
 #: request lifecycle states
 QUEUED = "queued"
@@ -92,6 +149,7 @@ class ServeRequest:
     submitted: float = 0.0
     started: float | None = None
     finished: float | None = None
+    attempts: int = 0               # handler invocations (1 + retries)
     cancel_event: threading.Event = dataclasses.field(
         default_factory=threading.Event, repr=False)
     done_event: threading.Event = dataclasses.field(
@@ -110,6 +168,7 @@ class ServeRequest:
             "submitted": self.submitted,
             "started": self.started,
             "finished": self.finished,
+            "attempts": self.attempts,
             "error": repr(self.error) if self.error is not None else None,
         }
 
@@ -158,6 +217,7 @@ class MiloServer:
         store_root: str | None = None,
         store_capacity: int = 8,
         num_workers: int = 2,
+        retry_policy: RetryPolicy | None = None,
         **config_overrides: Any,
     ):
         cfg = config if config is not None else MiloSessionConfig()
@@ -169,6 +229,10 @@ class MiloServer:
         self.store = ArtifactStore(store_root, capacity=store_capacity)
         self.buffers = BufferRegistry()
         self.num_workers = max(1, int(num_workers))
+        self.retry_policy = (retry_policy if retry_policy is not None
+                             else RetryPolicy())
+        self._retries = 0         # transient failures that were retried
+        self._failures = 0        # requests that terminated in ERROR
         self._sessions: dict[tuple, MiloSession] = {}
         self._requests: dict[str, ServeRequest] = {}
         self._log: list[dict[str, Any]] = []
@@ -297,8 +361,11 @@ class MiloServer:
             statuses: dict[str, int] = {}
             for r in self._requests.values():
                 statuses[r.status] = statuses.get(r.status, 0) + 1
+            retries, failures = self._retries, self._failures
         return {
             "requests": statuses,
+            "retries": retries,
+            "failures": failures,
             "store": self.store.stats(),
             "buffers": self.buffers.stats(),
             "sessions": len(self._sessions),
@@ -443,6 +510,20 @@ class MiloServer:
         with self._lock:
             self._log.append(req.snapshot())
 
+    def _should_retry(self, req: ServeRequest, exc: BaseException) -> bool:
+        """Retry iff the error is transient, attempts remain, and the
+        request is still live (not cancelled, deadline not passed)."""
+        policy = self.retry_policy
+        if not policy.is_transient(exc):
+            return False
+        if req.attempts >= policy.max_attempts:
+            return False
+        if req.cancel_event.is_set():
+            return False
+        if req.deadline is not None and time.time() > req.deadline:
+            return False
+        return True
+
     def _execute(self, req: ServeRequest) -> None:
         if req.cancel_event.is_set():
             self._finish(req, CANCELLED)
@@ -452,13 +533,30 @@ class MiloServer:
             return
         req.status = RUNNING
         req.started = time.time()
-        try:
-            handler: Callable[[ServeRequest], Any] = getattr(self, f"_run_{req.kind}")
-            req.result = handler(req)
-        except BaseException as e:  # noqa: BLE001 — re-raised in result()
-            req.error = e
-            self._finish(req, ERROR)
-            return
+        handler: Callable[[ServeRequest], Any] = getattr(self, f"_run_{req.kind}")
+        while True:
+            req.attempts += 1
+            try:
+                req.result = handler(req)
+            except BaseException as e:  # noqa: BLE001 — re-raised in result()
+                req.error = e
+                if not self._should_retry(req, e):
+                    with self._lock:
+                        self._failures += 1
+                    self._finish(req, ERROR)
+                    return
+                with self._lock:
+                    self._retries += 1
+                # backoff on the cancel event: a cancel() mid-backoff wakes
+                # the wait immediately instead of sleeping the delay out
+                if req.cancel_event.wait(
+                        self.retry_policy.delay(req.request_id, req.attempts)):
+                    self._finish(req, CANCELLED)
+                    return
+                continue
+            # a retried-then-succeeded request is a success, not an error
+            req.error = None
+            break
         stopped = bool(getattr(req.result, "stopped", False))
         if req.cancel_event.is_set():
             self._finish(req, CANCELLED)

@@ -12,8 +12,11 @@ file path convention:
     ask.
   * **Single-flight builds** — concurrent requests for a missing key block
     on one per-key build lock; exactly one preprocessing run happens and
-    every waiter receives its result.  ``builds`` / ``hits`` / ``disk_loads``
-    counters make the claim testable.
+    every waiter receives its result.  A build that RAISES releases the
+    flight lock on unwind and installs nothing — the next caller simply
+    rebuilds — so one bad build can never wedge a key.  ``builds`` /
+    ``build_failures`` / ``hits`` / ``disk_loads`` counters make both
+    claims testable.
   * **Two tiers** — an in-memory LRU of decoded ``MiloMetadata`` objects in
     front of an optional on-disk root (one ``.npz`` per key, written through
     ``MiloMetadata.save``'s atomic temp-file rename).  Evicting a memory
@@ -75,6 +78,7 @@ class ArtifactStore:
         self._entries: dict[ArtifactKey, ArtifactEntry] = {}
         self._flights: dict[ArtifactKey, threading.Lock] = {}
         self.builds = 0
+        self.build_failures = 0
         self.hits = 0
         self.disk_loads = 0
         self.evictions = 0
@@ -143,7 +147,18 @@ class ArtifactStore:
                     if pin:
                         loaded[1].pinned = True
                     return (*loaded, "disk")
-            md = build_fn()
+            try:
+                md = build_fn()
+            except BaseException:
+                # a failed build must not poison the key: count it, let the
+                # ``with flight:`` release the per-key lock on unwind, and
+                # leave no partial entry behind.  Each waiter blocked on the
+                # flight lock then resolves the key itself (cache miss →
+                # its own build attempt) instead of hanging forever on a
+                # lock the dead builder never released.
+                with self._lock:
+                    self.build_failures += 1
+                raise
             with self._lock:
                 self.builds += 1
                 entry = self._entries.get(key)
@@ -237,6 +252,7 @@ class ArtifactStore:
         with self._lock:
             return {
                 "builds": self.builds,
+                "build_failures": self.build_failures,
                 "hits": self.hits,
                 "disk_loads": self.disk_loads,
                 "evictions": self.evictions,

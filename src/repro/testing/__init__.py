@@ -1,0 +1,27 @@
+"""Test-support utilities shipped with the library.
+
+``repro.testing.faults`` is the deterministic fault-injection harness the
+fault-tolerance suite and the CI ``fault-smoke`` job drive: process kills at
+a chosen training step, scripted build-callable failures, slow-step
+injection, and checkpoint corruption — all counter-driven, never random, so
+every injected failure is replayable.
+"""
+from repro.testing.faults import (
+    FaultInjected,
+    KillAtStep,
+    TransientFault,
+    corrupt_checkpoint,
+    fail_nth_calls,
+    flaky,
+    slow_steps,
+)
+
+__all__ = [
+    "FaultInjected",
+    "KillAtStep",
+    "TransientFault",
+    "corrupt_checkpoint",
+    "fail_nth_calls",
+    "flaky",
+    "slow_steps",
+]

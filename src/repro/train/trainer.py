@@ -6,9 +6,16 @@ The trainer composes:
     (MILO or a baseline); the selector's per-sample plan weights arrive in
     each batch under ``weights`` and are consumed by the loss,
   * a jit'd train step (optimizer + schedule + clipping),
-  * ``CheckpointManager`` (atomic, async, keep-last-k),
-  * ``StragglerMonitor``,
-  * deterministic (seed, epoch, step) replay on restart.
+  * ``CheckpointManager`` (atomic, async, checksummed, keep-last-k),
+  * ``StragglerMonitor`` (per-record ``straggler`` flags plus the run-level
+    ``straggler_report()`` roll-up),
+  * deterministic (seed, epoch, step) replay on restart: ``fit(resume=True)``
+    restores the newest checkpoint that passes validation (torn/corrupted
+    ones are skipped), derives the mid-epoch cursor through
+    ``distributed.fault_tolerance.restart_state``, and — when the device
+    count changed since the checkpoint was written — surfaces an
+    ``elastic_plan`` (grad-accum preserving the global batch) on
+    ``Trainer.elastic`` and in the history.
 
 Logged history records carry the curriculum ``phase`` (sge/wre/fixed/
 adaptive) the epoch's subset came from, so loss curves can be segmented by
@@ -38,7 +45,12 @@ import numpy as np
 
 from repro.checkpoint.checkpointer import CheckpointManager
 from repro.data.pipeline import Pipeline
-from repro.distributed.fault_tolerance import StragglerMonitor
+from repro.distributed.fault_tolerance import (
+    ElasticPlan,
+    StragglerMonitor,
+    elastic_plan,
+    restart_state,
+)
 from repro.train import engine as engine_mod
 from repro.train.train_state import TrainState
 
@@ -51,6 +63,13 @@ class TrainerConfig:
     checkpoint_every_steps: int = 0
     async_checkpoint: bool = True
     log_every_steps: int = 50
+    # model-parallel degree assumed by the elastic-restart planner: when a
+    # resumed run sees a different device count than the run that wrote the
+    # checkpoint, ``elastic_plan`` re-tiles (data, model) and computes the
+    # grad-accumulation factor that keeps the global batch constant.  The
+    # plan is surfaced on ``Trainer.elastic`` and as an ``elastic`` history
+    # record for the launch layer to apply.
+    model_parallel: int = 1
     # fused path only: drain segment i's stacked metrics to host AFTER
     # segment i+1 has been dispatched, so the device→host copy overlaps the
     # next scan's execution instead of stalling the dispatch pipeline.
@@ -96,6 +115,9 @@ class Trainer:
             CheckpointManager(tcfg.checkpoint_dir) if tcfg.checkpoint_dir else None
         )
         self.history: list[dict] = []
+        # elastic-restart plan computed when a resume sees a different
+        # device count than the checkpoint's writer (None otherwise)
+        self.elastic: ElasticPlan | None = None
 
     def fused_active(self) -> bool:
         """Whether fit() will take the device-resident fused path."""
@@ -113,13 +135,60 @@ class Trainer:
             return None
         return plan_fn(epoch).phase
 
-    def _maybe_restore(self, state: TrainState) -> tuple[TrainState, int]:
+    def _ckpt_extra(self) -> dict:
+        """Run metadata stamped into every checkpoint manifest: what an
+        elastic restart needs to compare against the resuming environment."""
+        return {
+            "device_count": jax.device_count(),
+            "data_seed": self.pipeline.seed,
+            "batch_size": self.pipeline.batch_size,
+        }
+
+    def _save_checkpoint(self, global_step: int, state: TrainState) -> None:
+        if self.tcfg.async_checkpoint:
+            self.ckpt.save_async(global_step, state, extra=self._ckpt_extra())
+        else:
+            self.ckpt.save(global_step, state, extra=self._ckpt_extra())
+
+    def _maybe_restore(self, state: TrainState, t0: float) -> tuple[TrainState, int]:
+        """Auto-resume from the newest checkpoint that passes validation.
+
+        Torn or corrupted checkpoints (a crash mid-save, lost pages) are
+        skipped — ``latest_valid_step`` verifies manifests and checksums —
+        so a resumed run always restores a state that was fully written.
+        If the device count changed since the checkpoint was written, an
+        ``elastic_plan`` is computed (global batch preserved via grad
+        accumulation) and surfaced on ``self.elastic`` + the history.
+        """
         if self.ckpt is None:
             return state, 0
-        latest = self.ckpt.latest_step()
+        latest = self.ckpt.latest_valid_step()
         if latest is None:
             return state, 0
         state = self.ckpt.restore(latest, state)
+        extra = self.ckpt.manifest(latest).get("extra", {})
+        saved_devices = extra.get("device_count")
+        now_devices = jax.device_count()
+        if saved_devices and saved_devices != now_devices:
+            batch = extra.get("batch_size", self.pipeline.batch_size)
+            try:
+                self.elastic = elastic_plan(
+                    now_devices,
+                    model_parallel=self.tcfg.model_parallel,
+                    global_batch=batch,
+                    microbatch_per_replica=max(1, batch // saved_devices),
+                )
+                rec = {"elastic": True, "step": latest,
+                       "grad_accum": self.elastic.grad_accum,
+                       "mesh_shape": list(self.elastic.mesh_shape),
+                       "note": self.elastic.note}
+            except ValueError as e:
+                # device count the batch cannot tile — surface, don't crash
+                # the resume: the state itself restored fine
+                rec = {"elastic": True, "step": latest, "grad_accum": None,
+                       "mesh_shape": None, "note": f"no elastic plan: {e}"}
+            rec["wall"] = round(time.time() - t0, 2)
+            self.history.append(rec)
         return state, latest
 
     # -- device-resident fused path (train.engine) --------------------------
@@ -181,10 +250,7 @@ class Trainer:
             global_step += seg
             pos += seg
             if ckpt_every and global_step % ckpt_every == 0:
-                if self.tcfg.async_checkpoint:
-                    self.ckpt.save_async(global_step, state)
-                else:
-                    self.ckpt.save(global_step, state)
+                self._save_checkpoint(global_step, state)
         # epoch boundary: flush the trailing pending segment so eval records
         # (and the next epoch's) land after it, exactly as the sync path
         self._drain_history(t0)
@@ -244,10 +310,15 @@ class Trainer:
         self._pending_history = None  # defensive: a prior fit() that raised
         global_step = 0
         if resume:
-            state, global_step = self._maybe_restore(state)
+            state, global_step = self._maybe_restore(state, t0)
         steps_per_epoch = self.pipeline.steps_per_epoch()
-        start_epoch = global_step // max(steps_per_epoch, 1)
-        start_step = global_step % max(steps_per_epoch, 1)
+        # the deterministic restart cursor: (epoch, step_in_epoch, data_seed)
+        # are pure functions of (seed, step), so resuming replays the exact
+        # batch stream of the uninterrupted run — on either engine path
+        cursor = restart_state(
+            self.pipeline.seed, global_step, max(steps_per_epoch, 1)
+        )
+        start_epoch, start_step = cursor["epoch"], cursor["step_in_epoch"]
         fused = self.fused_active()
 
         for epoch in range(start_epoch, self.tcfg.epochs):
@@ -277,15 +348,27 @@ class Trainer:
                     and self.tcfg.checkpoint_every_steps
                     and global_step % self.tcfg.checkpoint_every_steps == 0
                 ):
-                    if self.tcfg.async_checkpoint:
-                        self.ckpt.save_async(global_step, state)
-                    else:
-                        self.ckpt.save(global_step, state)
+                    self._save_checkpoint(global_step, state)
             self._maybe_eval(state, epoch, global_step, t0)
         if self.ckpt is not None:
             self.ckpt.wait()
-            self.ckpt.save(global_step, state)
+            self.ckpt.save(global_step, state, extra=self._ckpt_extra())
         return state
+
+    def straggler_report(self) -> dict | None:
+        """Run-level straggler roll-up (None when nothing was flagged).
+
+        Per-step/segment ``straggler`` flags already ride on each history
+        record; this aggregates them WITHOUT touching the history stream —
+        history length stays a pure function of (epochs, log_every_steps),
+        never of wall-clock noise.
+        """
+        if not self.monitor.flagged:
+            return None
+        return {
+            "flagged": [[int(s), float(dt)] for s, dt in self.monitor.flagged],
+            "mean_step_time": float(self.monitor.mean_step_time),
+        }
 
     def _maybe_eval(
         self, state: TrainState, epoch: int, global_step: int, t0: float

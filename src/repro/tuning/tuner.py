@@ -12,7 +12,9 @@ Components (paper's three):
 from __future__ import annotations
 
 import dataclasses
+import json
 import math
+import os
 import time
 from typing import Any, Callable
 
@@ -36,8 +38,25 @@ def sample_config(space: Space, rng: np.random.Generator) -> dict:
     return cfg
 
 
+class _RngStateMixin:
+    """Serializable draw state for search algorithms.
+
+    The searches are deterministic functions of (seed, suggestion history),
+    so snapshotting the generator's bit state at a rung boundary and
+    restoring it on resume replays the exact same future suggestions — the
+    property hyperband's checkpointing relies on for identical trial
+    streams across a kill/restart.
+    """
+
+    def get_state(self) -> dict:
+        return {"rng": self._rng.bit_generator.state}
+
+    def set_state(self, state: dict) -> None:
+        self._rng.bit_generator.state = state["rng"]
+
+
 @dataclasses.dataclass
-class RandomSearch:
+class RandomSearch(_RngStateMixin):
     space: Space
     seed: int = 0
 
@@ -49,7 +68,7 @@ class RandomSearch:
 
 
 @dataclasses.dataclass
-class TPESearch:
+class TPESearch(_RngStateMixin):
     """Tree-structured Parzen Estimator (continuous dims via KDE, choices via
     re-weighted categorical)."""
 
@@ -145,6 +164,58 @@ def stack_configs(configs: list[dict]) -> dict[str, np.ndarray]:
     return {k: np.asarray([c[k] for c in configs]) for k in sorted(keys)}
 
 
+#: hyperband checkpoint file format version
+HB_CHECKPOINT_FORMAT = 1
+
+
+def _hb_identity(search, max_budget: int, eta: int) -> dict:
+    """What a resumable sweep must agree on: the schedule geometry and the
+    search algorithm + space (canonical JSON — tuples/lists unified)."""
+    return {
+        "max_budget": int(max_budget),
+        "eta": int(eta),
+        "search": type(search).__name__,
+        "space": json.dumps(getattr(search, "space", None), sort_keys=True,
+                            default=str),
+    }
+
+
+def _hb_write_checkpoint(path: str, state: dict) -> None:
+    """Atomic write-then-rename, fsync'd — a kill mid-write leaves the
+    previous rung's state intact, never a torn file."""
+    tmp = f"{path}.tmp"
+    with open(tmp, "w") as f:
+        json.dump(state, f)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+
+
+def _hb_load_checkpoint(path: str, identity: dict) -> dict | None:
+    if not os.path.exists(path):
+        return None
+    try:
+        with open(path) as f:
+            state = json.load(f)
+    except (json.JSONDecodeError, UnicodeDecodeError) as e:
+        raise ValueError(
+            f"{path}: corrupt hyperband checkpoint ({e}); delete it to "
+            "restart the sweep from scratch"
+        )
+    if state.get("format") != HB_CHECKPOINT_FORMAT:
+        raise ValueError(
+            f"{path}: hyperband checkpoint format "
+            f"{state.get('format')} != {HB_CHECKPOINT_FORMAT}"
+        )
+    if state.get("identity") != identity:
+        raise ValueError(
+            f"{path}: checkpoint belongs to a different sweep "
+            f"(stored {state.get('identity')}, this run {identity}); "
+            "point `checkpoint` elsewhere or delete the file"
+        )
+    return state
+
+
 def hyperband(
     objective: Callable[[dict, int], float] | None,
     search,
@@ -154,6 +225,7 @@ def hyperband(
     seed: int = 0,
     batched_objective: Callable[[list[dict], int], Any] | None = None,
     should_stop: Callable[[], bool] | None = None,
+    checkpoint: str | None = None,
 ) -> HyperbandResult:
     """Hyperband [Li'17]: brackets of successive halving.
 
@@ -174,6 +246,17 @@ def hyperband(
     request honor a deadline or cancellation between rungs.  A True poll
     ends the run immediately; the result carries ``stopped=True`` and the
     best config among the rungs that completed (None if none did).
+
+    ``checkpoint`` names a JSON state file making the sweep crash-safe at
+    rung granularity: after every completed rung the full scheduler state
+    (bracket, rung, surviving configs, trials, best, total epochs, search
+    RNG bit state) is written atomically.  A killed sweep relaunched with
+    the same arguments resumes at the rung it died in and produces the
+    IDENTICAL trial stream and ``best_config`` as an uninterrupted run —
+    the search RNG is restored bit-exactly, so every future suggestion
+    matches.  A checkpoint from a different sweep (schedule, search class,
+    or space disagree) raises instead of silently mixing runs; a finished
+    sweep short-circuits and returns its recorded result.
     """
     if objective is None and batched_objective is None:
         raise ValueError("provide objective or batched_objective")
@@ -185,13 +268,60 @@ def hyperband(
     total_epochs = 0
     stopped = False
 
+    identity = _hb_identity(search, max_budget, eta)
+    resume = _hb_load_checkpoint(checkpoint, identity) if checkpoint else None
+    if resume is not None:
+        trials = resume["trials"]
+        history = [(c, float(v)) for c, v in resume["history"]]
+        best_config = resume["best_config"]
+        best_score = float(resume["best_score"])
+        total_epochs = int(resume["total_epochs"])
+        search.set_state(resume["search_state"])
+        if resume.get("done"):
+            return HyperbandResult(best_config, best_score, trials,
+                                   total_epochs, float(resume["wall_time"]),
+                                   stopped=False)
+
+    def write_state(bracket: int, rung: int, configs, n: int | None,
+                    done: bool) -> None:
+        if checkpoint is None:
+            return
+        _hb_write_checkpoint(checkpoint, {
+            "format": HB_CHECKPOINT_FORMAT,
+            "identity": identity,
+            "bracket": bracket,
+            "rung": rung,
+            "configs": configs,
+            "bracket_n": n,
+            "trials": trials,
+            "history": [[c, v] for c, v in history],
+            "best_config": best_config,
+            "best_score": (float(best_score) if best_config is not None
+                           else -1e308),
+            "total_epochs": total_epochs,
+            "search_state": search.get_state(),
+            "wall_time": time.time() - t0,
+            "done": done,
+        })
+
     for s in range(s_max, -1, -1):
         if stopped:
             break
-        n = int(math.ceil((s_max + 1) / (s + 1) * eta ** s))
+        if resume is not None and s > resume["bracket"]:
+            continue  # bracket completed before the crash; results restored
+        if resume is not None and s == resume["bracket"] and resume["configs"] is not None:
+            # resume mid-bracket: survivors + rung index from the checkpoint,
+            # suggestions already drawn (the restored RNG state follows them)
+            n = int(resume["bracket_n"])
+            configs = resume["configs"]
+            first_rung = int(resume["rung"])
+        else:
+            n = int(math.ceil((s_max + 1) / (s + 1) * eta ** s))
+            configs = [search.suggest(history) for _ in range(n)]
+            first_rung = 0
+        resume = None
         r = max_budget * eta ** (-s)
-        configs = [search.suggest(history) for _ in range(n)]
-        for i in range(s + 1):
+        for i in range(first_rung, s + 1):
             if should_stop is not None and should_stop():
                 stopped = True
                 break
@@ -215,6 +345,13 @@ def hyperband(
             order = np.argsort(results)[::-1]
             keep = max(1, int(n_i / eta))
             configs = [configs[j] for j in order[:keep]]
+            # rung boundary: persist the full scheduler state (crash-safe
+            # resume point).  The final rung of bracket 0 marks the sweep
+            # done; the final rung of any other bracket arms the next one.
+            if i == s:
+                write_state(s - 1, 0, None, None, done=(s == 0))
+            else:
+                write_state(s, i + 1, configs, n, done=False)
             if len(configs) <= 1 and i < s:
                 # nothing left to halve; finish bracket with the survivor
                 continue

@@ -1,0 +1,589 @@
+"""Fault-tolerant execution layer (ISSUE 7): crash-safe checkpoints,
+deterministic resume everywhere, and the fault-injection harness.
+
+The load-bearing claims pinned here:
+  * a SIGKILLed fused run resumed from its latest valid checkpoint produces
+    BIT-IDENTICAL final params and history (modulo wall stamps) to the
+    uninterrupted run;
+  * torn / corrupted / half-lost checkpoints are detected and skipped, never
+    restored;
+  * the checkpoint GC can never delete a step whose async write is in
+    flight, and an async write failure re-raises on ``wait()``;
+  * ``restart_state`` agrees with the data pipeline's seeding, so the resume
+    cursor replays the exact batch stream;
+  * a hyperband sweep killed mid-rung resumes at its rung boundary with an
+    identical trial stream and ``best_config``;
+  * a failed single-flight artifact build releases the flight lock, counts
+    itself, and leaves the server healthy; transient failures retry under
+    ``RetryPolicy`` with deterministic backoff.
+"""
+from __future__ import annotations
+
+import json
+import os
+import signal
+import subprocess
+import sys
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpointer import (
+    CheckpointCorruptionError,
+    CheckpointManager,
+)
+from repro.data.pipeline import Pipeline
+from repro.distributed.fault_tolerance import StragglerMonitor, restart_state
+from repro.selection import MiloSession, MiloSessionConfig, build_selector
+from repro.serve import (
+    DONE,
+    ERROR,
+    ArtifactStore,
+    MiloServer,
+    RetryPolicy,
+    TransientServeError,
+    artifact_request_config,
+)
+from repro.testing.faults import (
+    CORRUPTION_MODES,
+    TransientFault,
+    corrupt_checkpoint,
+    fail_nth_calls,
+    flaky,
+)
+from repro.tuning.tuner import TPESearch, hyperband
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _tree(offset: float = 0.0):
+    return {"a": jnp.arange(12.0).reshape(3, 4) + offset,
+            "b": {"c": jnp.ones((64,), jnp.float32) * (1 + offset)}}
+
+
+# ---------------------------------------------------------------------------
+# checkpoint hardening: validation, torn-checkpoint skipping
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", CORRUPTION_MODES)
+def test_corrupted_checkpoint_detected_and_skipped(tmp_path, mode):
+    """Every corruption mode fails validation; ``latest_valid_step`` falls
+    back to the newest intact checkpoint and ``restore`` refuses the bad one."""
+    mgr = CheckpointManager(str(tmp_path), keep_last=5)
+    for step in (1, 2, 3):
+        mgr.save(step, _tree(step))
+    damaged = corrupt_checkpoint(str(tmp_path), 3, mode=mode)
+    assert os.path.basename(os.path.dirname(damaged)) == "step_3"
+
+    assert mgr.all_steps() == [1, 2, 3]        # candidates still listed
+    assert not mgr.is_valid_step(3)
+    assert mgr.is_valid_step(2)
+    assert mgr.latest_valid_step() == 2
+    with pytest.raises(CheckpointCorruptionError):
+        mgr.restore(3, _tree())
+    # the intact neighbor restores bit-exactly
+    out = mgr.restore(2, _tree())
+    np.testing.assert_array_equal(np.asarray(out["a"]),
+                                  np.arange(12.0).reshape(3, 4) + 2)
+
+
+def test_latest_valid_step_none_when_all_damaged(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, _tree())
+    corrupt_checkpoint(str(tmp_path), 1, mode="truncate_manifest")
+    assert mgr.latest_valid_step() is None
+
+
+def test_async_save_failure_reraises_on_wait(tmp_path):
+    """An async write error is a failed save: it must surface on the
+    training thread at the next ``wait()``, not vanish in the worker."""
+    mgr = CheckpointManager(str(tmp_path))
+
+    def boom(step, host_tree, extra=None):
+        raise OSError("disk gone")
+
+    mgr._write = boom
+    mgr.save_async(7, _tree())
+    with pytest.raises(OSError, match="disk gone"):
+        mgr.wait()
+    # the error is consumed: the manager keeps working afterwards
+    mgr.wait()
+
+
+def test_gc_never_deletes_inflight_async_step(tmp_path):
+    """Regression for the GC/async race: with keep_last=1, a sync save's GC
+    runs while an async save is still writing — the in-flight step must
+    survive both that GC and its own post-write GC."""
+    mgr = CheckpointManager(str(tmp_path), keep_last=1)
+    gate = threading.Event()
+    orig_write = mgr._write
+
+    def gated_write(step, host_tree, extra=None):
+        if step == 5:
+            assert gate.wait(30)
+        return orig_write(step, host_tree, extra)
+
+    mgr._write = gated_write
+    mgr.save_async(5, _tree())       # blocked mid-write, registered in-flight
+    mgr.save(6, _tree())             # concurrent sync save triggers GC
+    with mgr._lock:
+        assert 5 in mgr._inflight
+    gate.set()
+    mgr.wait()
+    # without in-flight tracking, step 5's own GC (keep_last=1, steps [5, 6])
+    # would have deleted the directory it just renamed
+    assert mgr.is_valid_step(5) and mgr.is_valid_step(6)
+
+
+def test_manifest_carries_extra_and_checksums(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(4, _tree(), extra={"device_count": 8, "batch_size": 32})
+    man = mgr.validate_step(4)
+    assert man["format"] == 2
+    assert man["extra"] == {"device_count": 8, "batch_size": 32}
+    assert man["checksums"]          # every data file is hashed
+
+
+# ---------------------------------------------------------------------------
+# straggler monitor: exact warmup statistics
+# ---------------------------------------------------------------------------
+
+def test_straggler_warmup_mean_is_true_mean():
+    """Warmup uses an unbiased incremental mean: the old ``(mean + dt) / 2``
+    halved every earlier observation's weight each step."""
+    mon = StragglerMonitor(warmup_steps=4)
+    for i, dt in enumerate([0.1, 0.2, 0.3, 0.4]):
+        assert mon.observe(i, dt) is False     # warmup never flags
+    assert mon.mean_step_time == pytest.approx(0.25)
+    # the biased estimate would be 0.284375, dominated by late samples
+    assert mon.mean_step_time != pytest.approx(0.284375)
+
+
+def test_straggler_flags_known_outlier_after_warmup():
+    mon = StragglerMonitor(warmup_steps=3, z_threshold=3.0)
+    for i, dt in enumerate([0.1, 0.101, 0.102]):
+        mon.observe(i, dt)
+    assert mon.observe(3, 0.103) is False      # in-band
+    assert mon.observe(4, 1.5) is True         # 100x outlier
+    assert mon.flagged == [(4, 1.5)]
+
+
+def test_trainer_straggler_report_rollup():
+    """The run-level roll-up aggregates flagged steps without touching the
+    history stream (its length must stay schedule-deterministic)."""
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    tr = Trainer.__new__(Trainer)
+    tr.monitor = StragglerMonitor()
+    assert tr.straggler_report() is None
+    tr.monitor.flagged = [(7, 1.5), (9, 2.0)]
+    tr.monitor._mean = 0.1
+    rep = tr.straggler_report()
+    assert rep["flagged"] == [[7, 1.5], [9, 2.0]]
+    assert rep["mean_step_time"] == pytest.approx(0.1)
+
+
+# ---------------------------------------------------------------------------
+# restart cursor vs data pipeline seeding
+# ---------------------------------------------------------------------------
+
+def test_restart_state_matches_pipeline_replay():
+    """The cursor's (epoch, step_in_epoch, data_seed) must replay the exact
+    batch indices the uninterrupted run would have consumed."""
+    n, k, batch, seed = 128, 64, 16, 11
+    sel = build_selector("adaptive_random", n=n, k=k, R=1, seed=3)
+    feats = np.zeros((n, 4), np.float32)
+    pipe = Pipeline(None, sel, batch, seed=seed, arrays={"x": feats})
+    spe = pipe.steps_per_epoch()
+    global_step = spe + 2                      # mid-epoch 1
+    cur = restart_state(seed, global_step, spe)
+    assert cur["epoch"] == 1 and cur["step_in_epoch"] == 2
+    # the documented contract: data_seed IS the pipeline's permutation seed
+    assert cur["data_seed"] == seed * 1_000_003 + cur["epoch"]
+
+    full_idx, full_w = pipe.device_epoch(1)
+    res_idx, res_w = pipe.device_epoch(cur["epoch"],
+                                       start_step=cur["step_in_epoch"])
+    np.testing.assert_array_equal(np.asarray(res_idx),
+                                  np.asarray(full_idx)[2:])
+    np.testing.assert_array_equal(np.asarray(res_w), np.asarray(full_w)[2:])
+
+
+def test_restart_state_rejects_degenerate_epoch_length():
+    with pytest.raises(ValueError):
+        restart_state(0, 10, 0)
+
+
+# ---------------------------------------------------------------------------
+# kill-and-resume: SIGKILL mid-epoch, bit-identical final params + history
+# ---------------------------------------------------------------------------
+
+FAULT_SCRIPT = r"""
+import json, sys
+mode, ckpt_dir, out = sys.argv[1], sys.argv[2], sys.argv[3]
+import numpy as np, jax, jax.numpy as jnp
+from typing import NamedTuple
+from repro.data.pipeline import Pipeline
+from repro.models.classifier import init_mlp, nesterov_update, weighted_nll
+from repro.selection import build_selector
+from repro.train.trainer import Trainer, TrainerConfig
+
+N, D, C, K, BATCH = 256, 8, 4, 96, 16      # 6 steps per epoch
+rng = np.random.default_rng(0)
+feats = rng.normal(size=(N, D)).astype(np.float32)
+labs = rng.integers(0, C, size=N).astype(np.int64)
+
+class State(NamedTuple):
+    params: dict
+    mom: dict
+    step: jax.Array
+
+def train_step(state, batch):
+    loss, g = jax.value_and_grad(weighted_nll)(
+        state.params, batch["x"], batch["y"], batch["weights"])
+    p, m = nesterov_update(state.params, state.mom, g, 0.05)
+    return State(p, m, state.step + 1), {"loss": loss}
+
+sel = build_selector("adaptive_random", n=N, k=K, R=1, seed=3)
+pipe = Pipeline(None, sel, BATCH, seed=1, arrays={"x": feats, "y": labs})
+tr = Trainer(jax.jit(train_step), pipe,
+             TrainerConfig(epochs=3, checkpoint_dir=ckpt_dir,
+                           checkpoint_every_steps=5, async_checkpoint=True,
+                           log_every_steps=1),
+             fused=True, superstep=32)
+if mode == "kill":
+    from repro.testing.faults import KillAtStep
+    tr.monitor = KillAtStep(8)   # dies at boundary step 10: mid-epoch 1
+params = init_mlp(jax.random.PRNGKey(0), D, C)
+state = State(params, jax.tree.map(jnp.zeros_like, params),
+              jnp.zeros((), jnp.int32))
+state = tr.fit(state, resume=True)
+flat = {f"p{i}": np.asarray(l) for i, l in enumerate(jax.tree.leaves(state.params))}
+np.savez(out + ".npz", step=int(state.step), **flat)
+hist = [{k: v for k, v in h.items() if k not in ("wall", "straggler")}
+        for h in tr.history if "loss" in h]
+json.dump(hist, open(out + ".hist.json", "w"))
+print("RUN_COMPLETE", int(state.step))
+"""
+
+
+def _run_child(script, argv, *, expect_sigkill=False, timeout=300):
+    env = dict(os.environ, PYTHONPATH="src")
+    r = subprocess.run(
+        [sys.executable, "-c", script, *argv],
+        capture_output=True, text=True, env=env, cwd=REPO_ROOT,
+        timeout=timeout,
+    )
+    if expect_sigkill:
+        assert r.returncode == -signal.SIGKILL, (
+            r.returncode, r.stdout[-1000:], r.stderr[-2000:])
+    else:
+        assert r.returncode == 0, r.stderr[-2000:]
+    return r
+
+
+def test_kill_and_resume_bit_identical(tmp_path):
+    """SIGKILL a fused run mid-epoch (async checkpointing on), restart it,
+    and require the resumed run's final params to be BIT-identical to an
+    uninterrupted run's — and its history to be the exact tail of the
+    uninterrupted history (modulo wall stamps)."""
+    ref_out = str(tmp_path / "ref")
+    _run_child(FAULT_SCRIPT, ["ref", str(tmp_path / "ref_ckpt"), ref_out])
+
+    ckpt = str(tmp_path / "ckpt")
+    r = _run_child(FAULT_SCRIPT, ["kill", ckpt, str(tmp_path / "dead")],
+                   expect_sigkill=True)
+    assert "RUN_COMPLETE" not in r.stdout      # it really died mid-run
+
+    res_out = str(tmp_path / "res")
+    _run_child(FAULT_SCRIPT, ["run", ckpt, res_out])
+
+    with np.load(ref_out + ".npz") as ref, np.load(res_out + ".npz") as res:
+        assert int(ref["step"]) == int(res["step"]) == 18
+        for k in ref.files:
+            np.testing.assert_array_equal(ref[k], res[k])
+    ref_h = json.load(open(ref_out + ".hist.json"))
+    res_h = json.load(open(res_out + ".hist.json"))
+    # the resumed run replays exactly the post-checkpoint steps
+    assert 0 < len(res_h) < len(ref_h)
+    assert res_h == ref_h[len(ref_h) - len(res_h):]
+    print("BIT_IDENTICAL_FINAL_PARAMS_OK")
+
+
+def test_resume_surfaces_elastic_plan_on_device_count_change(tmp_path):
+    """A checkpoint stamped with a different device count triggers an
+    elastic plan (grad-accum preserving the global batch) on resume."""
+    from typing import NamedTuple
+
+    from repro.models.classifier import init_mlp, nesterov_update, weighted_nll
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    N, D, C, K, BATCH = 128, 8, 4, 64, 16
+    rng = np.random.default_rng(0)
+    feats = rng.normal(size=(N, D)).astype(np.float32)
+    labs = rng.integers(0, C, size=N).astype(np.int64)
+
+    class State(NamedTuple):
+        params: dict
+        mom: dict
+        step: jax.Array
+
+    def train_step(state, batch):
+        loss, g = jax.value_and_grad(weighted_nll)(
+            state.params, batch["x"], batch["y"], batch["weights"])
+        p, m = nesterov_update(state.params, state.mom, g, 0.05)
+        return State(p, m, state.step + 1), {"loss": loss}
+
+    sel = build_selector("adaptive_random", n=N, k=K, R=1, seed=3)
+    pipe = Pipeline(None, sel, BATCH, seed=1, arrays={"x": feats, "y": labs})
+    tr = Trainer(jax.jit(train_step), pipe,
+                 TrainerConfig(epochs=2, checkpoint_dir=str(tmp_path)),
+                 fused=True)
+    params = init_mlp(jax.random.PRNGKey(0), D, C)
+    state = State(params, jax.tree.map(jnp.zeros_like, params),
+                  jnp.zeros((), jnp.int32))
+    # a checkpoint written by a (fictional) 4-device run of the same job
+    tr.ckpt.save(4, state, extra={"device_count": 4, "batch_size": BATCH,
+                                  "data_seed": 1})
+    tr.fit(state, resume=True)
+    assert tr.elastic is not None
+    assert tr.elastic.grad_accum == 4          # 16 / (1 device * mb 4)
+    elastic_recs = [h for h in tr.history if h.get("elastic")]
+    assert len(elastic_recs) == 1 and elastic_recs[0]["step"] == 4
+
+
+# ---------------------------------------------------------------------------
+# hyperband: killed mid-rung, resumes to the identical sweep
+# ---------------------------------------------------------------------------
+
+HB_SCRIPT = r"""
+import json, sys
+mode, ck, out = sys.argv[1], sys.argv[2], sys.argv[3]
+from repro.tuning.tuner import TPESearch, hyperband
+
+space = {"lr": ("log", 1e-4, 1e-1), "hidden": ("choice", [16, 32, 64])}
+
+def obj(cfg, budget):
+    return -abs(cfg["lr"] - 0.01) * 100 + budget * 0.001 + cfg["hidden"] * 1e-5
+
+if mode == "kill":
+    from repro.testing.faults import kill_process
+    base, calls = obj, [0]
+    def obj(cfg, budget):
+        calls[0] += 1
+        if calls[0] == 11:      # mid rung 1 of the first bracket
+            kill_process()
+        return base(cfg, budget)
+
+res = hyperband(obj, TPESearch(space, seed=3), max_budget=9, eta=3,
+                checkpoint=(None if ck == "none" else ck))
+json.dump({"best_config": res.best_config, "best_score": res.best_score,
+           "trials": res.trials, "total_epochs": res.total_epochs},
+          open(out, "w"))
+print("HB_COMPLETE")
+"""
+
+
+def test_hyperband_killed_mid_rung_resumes_identically(tmp_path):
+    ref_out = str(tmp_path / "ref.json")
+    _run_child(HB_SCRIPT, ["run", "none", ref_out], timeout=120)
+
+    ck = str(tmp_path / "hb_state.json")
+    _run_child(HB_SCRIPT, ["kill", ck, str(tmp_path / "dead.json")],
+               expect_sigkill=True, timeout=120)
+    assert os.path.exists(ck)                  # rung boundary state survived
+
+    res_out = str(tmp_path / "res.json")
+    _run_child(HB_SCRIPT, ["run", ck, res_out], timeout=120)
+
+    ref = json.load(open(ref_out))
+    res = json.load(open(res_out))
+    assert res == ref                          # identical trial stream + best
+
+
+def test_hyperband_should_stop_then_resume_in_process(tmp_path):
+    """A deadline-stopped sweep leaves a resumable checkpoint; relaunching
+    with a fresh search object completes it identically, and a finished
+    checkpoint short-circuits."""
+    space = {"lr": ("log", 1e-4, 1e-1), "hidden": ("choice", [16, 32])}
+
+    def obj(cfg, budget):
+        return -abs(cfg["lr"] - 0.01) * 100 + budget * 0.001
+
+    ref = hyperband(obj, TPESearch(space, seed=5), max_budget=9, eta=3)
+    ck = str(tmp_path / "hb.json")
+    polls = [0]
+
+    def stop_after_two_rungs():
+        polls[0] += 1
+        return polls[0] > 2
+
+    part = hyperband(obj, TPESearch(space, seed=5), max_budget=9, eta=3,
+                     checkpoint=ck, should_stop=stop_after_two_rungs)
+    assert part.stopped
+    res = hyperband(obj, TPESearch(space, seed=5), max_budget=9, eta=3,
+                    checkpoint=ck)
+    assert not res.stopped
+    assert res.best_config == ref.best_config
+    assert res.trials == ref.trials
+    # done checkpoint short-circuits without re-evaluating anything
+    calls = fail_nth_calls(obj, fail_on=range(1, 10_000))
+    done = hyperband(calls, TPESearch(space, seed=5), max_budget=9, eta=3,
+                     checkpoint=ck)
+    assert calls.calls == 0 and done.best_config == ref.best_config
+
+
+def test_hyperband_checkpoint_identity_mismatch_raises(tmp_path):
+    space = {"lr": ("log", 1e-3, 1e-1)}
+    obj = lambda cfg, budget: cfg["lr"]
+    ck = str(tmp_path / "hb.json")
+    hyperband(obj, TPESearch(space, seed=0), max_budget=9, eta=3, checkpoint=ck)
+    with pytest.raises(ValueError, match="different sweep"):
+        hyperband(obj, TPESearch(space, seed=0), max_budget=27, eta=3,
+                  checkpoint=ck)
+
+
+# ---------------------------------------------------------------------------
+# serving: failed builds, flight-lock release, retry policy
+# ---------------------------------------------------------------------------
+
+N_SRV, D_SRV, C_SRV = 240, 8, 3
+
+
+def _dataset(seed: int = 0):
+    rng = np.random.default_rng(seed)
+    labs = rng.integers(0, C_SRV, N_SRV).astype(np.int64)
+    feats = (rng.normal(size=(N_SRV, D_SRV)) + 0.8 * labs[:, None]).astype(
+        np.float32)
+    return feats, labs
+
+
+def _config(**kw) -> MiloSessionConfig:
+    base = dict(subset_fraction=0.2, n_sge_subsets=2, gram_free=True,
+                total_epochs=4, sub_steps=2)
+    base.update(kw)
+    return MiloSessionConfig(**base)
+
+
+def test_store_failed_build_releases_flight_lock(tmp_path):
+    """An exception inside the single-flight build must release the per-key
+    flight lock (no hung waiters) and install nothing; the next caller
+    rebuilds successfully."""
+    feats, labs = _dataset()
+    cfg = _config()
+    store = ArtifactStore(str(tmp_path / "store"))
+    req = artifact_request_config(cfg)
+    session = MiloSession(cfg)
+    fp = "f" * 16
+    key = store.key_for(fp, req)
+    build = flaky(
+        lambda: session.build_metadata(feats, labs, fingerprint=fp),
+        failures=1)
+    results, errors = [], []
+
+    def worker():
+        try:
+            _, _, source = store.get_or_build(key, req, build)
+            results.append(source)
+        except TransientFault as e:
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker) for _ in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=120)
+    assert not any(t.is_alive() for t in threads), "waiters hung on the flight lock"
+    assert len(errors) == 1                      # exactly the injected failure
+    assert sorted(results) == ["built", "memory", "memory"]
+    assert store.build_failures == 1 and store.builds == 1
+    # the store serves the next identical request from memory
+    _, _, source = store.get_or_build(key, req, build)
+    assert source == "memory"
+
+
+def test_server_retries_transient_build_failure(tmp_path, monkeypatch):
+    """A transient artifact-build failure is retried under RetryPolicy; the
+    request succeeds on attempt 2 and every counter tells the story."""
+    feats, labs = _dataset()
+    orig = MiloSession.build_metadata
+    calls = [0]
+
+    def flaky_build(self, *a, **kw):
+        calls[0] += 1
+        if calls[0] == 1:
+            raise TransientFault("injected build failure")
+        return orig(self, *a, **kw)
+
+    monkeypatch.setattr(MiloSession, "build_metadata", flaky_build)
+    with MiloServer(_config(), store_root=str(tmp_path / "store"),
+                    num_workers=1,
+                    retry_policy=RetryPolicy(base_delay=0.01,
+                                             retry_on=(TransientFault,))
+                    ) as server:
+        rid = server.submit("preprocess", features=feats, labels=labs)
+        out = server.result(rid, timeout=120)
+        assert out["source"] == "built"
+        snap = server.poll(rid)
+        assert snap["status"] == DONE and snap["attempts"] == 2
+        assert snap["error"] is None             # a retried success is a success
+        st = server.stats()
+        assert st["retries"] == 1 and st["failures"] == 0
+        assert st["store"]["build_failures"] == 1
+
+
+def test_server_permanent_error_fails_fast_and_stays_healthy(tmp_path,
+                                                             monkeypatch):
+    """A permanent (non-transient) failure is NOT retried: the request lands
+    in ERROR with its exception, and the server keeps serving."""
+    feats, labs = _dataset()
+    orig = MiloSession.build_metadata
+    calls = [0]
+
+    def once_broken(self, *a, **kw):
+        calls[0] += 1
+        if calls[0] == 1:
+            raise ValueError("permanently malformed request")
+        return orig(self, *a, **kw)
+
+    monkeypatch.setattr(MiloSession, "build_metadata", once_broken)
+    with MiloServer(_config(), store_root=str(tmp_path / "store"),
+                    num_workers=1) as server:
+        rid = server.submit("preprocess", features=feats, labels=labs)
+        with pytest.raises(ValueError, match="permanently malformed"):
+            server.result(rid, timeout=120)
+        snap = server.poll(rid)
+        assert snap["status"] == ERROR and snap["attempts"] == 1
+        # server healthy: the next identical request builds and completes
+        rid2 = server.submit("preprocess", features=feats, labels=labs)
+        out = server.result(rid2, timeout=120)
+        assert out["source"] == "built"
+        st = server.stats()
+        assert st["failures"] == 1 and st["retries"] == 0
+        assert st["store"]["build_failures"] == 1 and st["store"]["builds"] == 1
+
+
+def test_retry_policy_deterministic_backoff():
+    p = RetryPolicy(base_delay=0.1, max_delay=1.0, jitter=0.25)
+    d1, d2 = p.delay("r000001", 1), p.delay("r000001", 2)
+    # deterministic: same (request, attempt) -> same delay, every time
+    assert d1 == p.delay("r000001", 1)
+    # exponential base, bounded jitter
+    assert 0.1 <= d1 <= 0.1 * 1.25
+    assert 0.2 <= d2 <= 0.2 * 1.25
+    assert p.delay("r000001", 10) <= 1.0 * 1.25  # max_delay caps the base
+    # different requests de-synchronize (the anti-thundering-herd property)
+    assert p.delay("r000002", 1) != d1
+    # classification: types in retry_on and duck-typed `transient` both count
+    assert p.is_transient(TransientServeError("x"))
+    assert p.is_transient(TransientFault("x"))   # duck-typed .transient marker
+    assert not p.is_transient(ValueError("x"))
+
+
+def test_retry_policy_rejects_zero_attempts():
+    with pytest.raises(ValueError):
+        RetryPolicy(max_attempts=0)
