@@ -23,7 +23,11 @@ Padding contract (size bucketing): all-zero feature rows are treated as
 padding — facility location pins their cover to +inf at init so they
 contribute nothing, and the greedy engines' ``valid`` mask keeps them from
 ever being selected.  (A genuinely all-zero embedding is degenerate under
-cosine similarity to begin with.)
+cosine similarity to begin with.)  Because "all-zero" is a *sentinel* here,
+a genuinely zero-norm data row reaching this layer is silently treated as
+padding — screen real inputs upstream with
+``repro.health.validate_features`` (which flags zero-norm rows via
+``similarity.zero_norm_rows``) rather than relaxing this contract.
 
 Numerics: trajectories match the Gram-materializing path exactly on the
 facility-location column reductions (same values, same reduction order); the

@@ -107,6 +107,11 @@ class MiloPreprocessor:
     # approximation).  True derives s from the class's true (n_c, k_c) —
     # the unpadded draw size — at no extra compile cost.
     exact_sge_candidates: bool = False
+    # Input firewall policy run before any selection math (None = off):
+    # "raise" refuses non-finite / zero-norm rows, "repair" fixes them
+    # deterministically, "quarantine" excludes them from the ground set
+    # and records the indices in provenance.  See repro.health.firewall.
+    firewall: str | None = None
 
     def _sharded_set_fn(self, name: str, mesh) -> submodular.SetFunction:
         from repro.core import sharded as sharded_mod
@@ -326,7 +331,85 @@ class MiloPreprocessor:
     ) -> MiloMetadata:
         """``prep_seed`` is provenance only: the integer the caller derived
         ``key`` from, recorded in the artifact config so reuse checks can
-        tell two stochastic-greedy draws apart."""
+        tell two stochastic-greedy draws apart.
+
+        With ``firewall`` set, the ground set is screened first
+        (``repro.health.validate_features``) and the resulting
+        ``DataHealthReport`` is stamped into the artifact config under
+        ``data_health``.  Under the ``quarantine`` policy the flagged rows
+        are excluded from selection entirely: ``k`` is computed over the
+        surviving rows, quarantined rows get zero WRE probability and can
+        never appear in an SGE subset, and their indices are recorded in
+        provenance.
+        """
+        features = np.asarray(features)
+        report = None
+        if self.firewall is not None:
+            from repro.health.firewall import validate_features
+
+            features, report = validate_features(
+                features, labels, policy=self.firewall,
+                subset_fraction=self.subset_fraction,
+            )
+        quarantined = report.quarantined_rows if report is not None else []
+        if quarantined:
+            m = features.shape[0]
+            labels_full = (
+                None if labels is None else np.asarray(labels, np.int64))
+            keep = np.setdiff1d(
+                np.arange(m, dtype=np.int64),
+                np.asarray(quarantined, np.int64),
+            )
+            md = self._preprocess_clean(
+                features[keep],
+                None if labels_full is None else labels_full[keep],
+                key, encoder_id=encoder_id, prep_seed=prep_seed,
+            )
+            md = self._lift_quarantined(md, keep, m, labels_full)
+        else:
+            md = self._preprocess_clean(
+                features, labels, key,
+                encoder_id=encoder_id, prep_seed=prep_seed,
+            )
+        if report is not None:
+            md.config["firewall"] = self.firewall
+            md.config["data_health"] = report.to_dict()
+        return md
+
+    @staticmethod
+    def _lift_quarantined(
+        md: MiloMetadata,
+        keep: np.ndarray,
+        m: int,
+        labels_full: np.ndarray | None,
+    ) -> MiloMetadata:
+        """Re-index an artifact built over ``features[keep]`` back to the
+        full ground set: bank indices map through ``keep``, probabilities
+        and importance scatter into zeros at the quarantined rows (which
+        therefore can never be drawn)."""
+        probs = np.zeros((m,), np.float32)
+        probs[keep] = md.wre_probs
+        imp = np.zeros((m,), np.float32)
+        imp[keep] = md.wre_importance
+        return MiloMetadata(
+            sge_subsets=keep[md.sge_subsets],
+            wre_probs=probs,
+            wre_importance=imp,
+            class_labels=(labels_full if labels_full is not None
+                          else np.zeros((m,), np.int64)),
+            class_budgets=md.class_budgets,
+            config=md.config,
+        )
+
+    def _preprocess_clean(
+        self,
+        features: np.ndarray,
+        labels: np.ndarray | None,
+        key: jax.Array,
+        *,
+        encoder_id: str = "precomputed",
+        prep_seed: int | None = None,
+    ) -> MiloMetadata:
         features = np.asarray(features)
         if self.gram_free and self.metric != "cosine":
             raise ValueError(

@@ -21,9 +21,29 @@ Metric = Literal["cosine", "dot", "rbf"]
 
 
 def normalize_rows(z: jax.Array, eps: float = 1e-8) -> jax.Array:
-    """L2-normalize row vectors."""
+    """L2-normalize row vectors.
+
+    Zero-norm rows survive as exact zero vectors (``0 / eps``) rather than
+    raising — deliberately: the gram-free engines use all-zero rows as
+    padding sentinels (FL init pins their cover to +inf, graph-cut zeroes
+    their column sums).  The cost is that a *genuine* zero-norm data row is
+    silently flattened and then scores a constant 0.5 against everything
+    under the rescaled cosine, distorting facility-location gains.  Screen
+    real ground sets with :func:`repro.health.validate_features`, which
+    uses :func:`zero_norm_rows` to detect them before any selection math.
+    """
     norm = jnp.linalg.norm(z, axis=-1, keepdims=True)
     return z / jnp.maximum(norm, eps)
+
+
+def zero_norm_rows(z: jax.Array, eps: float = 1e-8) -> jax.Array:
+    """Boolean row mask: rows ``normalize_rows`` would flatten to zero.
+
+    The canonical zero-norm detector shared with the health firewall: a
+    row is flagged when its L2 norm is <= ``eps`` (the same floor
+    ``normalize_rows`` divides by).  Pure jnp and jit-friendly.
+    """
+    return jnp.linalg.norm(z, axis=-1) <= eps
 
 
 def cosine_similarity(zq: jax.Array, zk: jax.Array) -> jax.Array:

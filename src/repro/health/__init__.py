@@ -1,0 +1,60 @@
+"""Numerical-health guardrails for the selection→training→serving stack.
+
+PR 7 made the stack survive *process* death; this layer makes it survive
+*semantic* failure — the inputs and intermediate states that are wrong
+rather than missing:
+
+* :mod:`repro.health.firewall` — ``validate_features`` screens the ground
+  set before any selection math (non-finite rows, zero-norm embeddings,
+  duplicate/constant features, degenerate class geometry) and produces a
+  :class:`DataHealthReport` that is stamped into ``MiloMetadata``
+  provenance.  Policies: ``raise`` / ``repair`` / ``quarantine``.
+* :mod:`repro.health.guard` — a divergence guard fused inside the training
+  step (non-finite / loss-spike detection with zero extra host syncs on
+  the healthy path) and the :class:`GuardPolicy` describing what to do
+  about it: ``skip_step`` / ``rollback`` / ``abort``.
+* :mod:`repro.health.fallback` — degraded-mode selection: a declared
+  selector chain (e.g. ``milo`` → ``adaptive_random``) walked on
+  degenerate math, with every hop recorded in plan provenance.
+* :mod:`repro.health.breaker` — a per-key circuit breaker so a
+  deterministically-failing artifact build fails fast instead of being
+  re-hammered by the retry layer.
+
+Everything here is deterministic: repairs are pure functions of the row
+index, guard decisions are pure functions of the metrics, fallback chains
+are declared up front, and the breaker clock is injectable.
+"""
+from repro.health.breaker import CircuitBreaker, CircuitOpenError
+from repro.health.fallback import (
+    FallbackExhaustedError,
+    FallbackSelector,
+    SelectionDegenerateError,
+)
+from repro.health.firewall import (
+    FIREWALL_POLICIES,
+    DataHealthError,
+    DataHealthReport,
+    validate_features,
+)
+from repro.health.guard import (
+    GUARD_KEY,
+    DivergenceError,
+    GuardPolicy,
+    guarded_step,
+)
+
+__all__ = [
+    "CircuitBreaker",
+    "CircuitOpenError",
+    "DataHealthError",
+    "DataHealthReport",
+    "DivergenceError",
+    "FIREWALL_POLICIES",
+    "FallbackExhaustedError",
+    "FallbackSelector",
+    "GUARD_KEY",
+    "GuardPolicy",
+    "SelectionDegenerateError",
+    "guarded_step",
+    "validate_features",
+]

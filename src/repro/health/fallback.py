@@ -1,0 +1,119 @@
+"""Degraded-mode selection: walk a declared fallback chain on failure.
+
+MILO's selectors assume well-conditioned geometry the papers never had to
+defend: a WRE draw needs ``k`` nonzero-probability rows, greedy gains need
+non-degenerate similarity structure.  When that fails today the exception
+kills the whole training run — even though a perfectly serviceable
+degraded answer (``adaptive_random`` over the same budget) exists.
+
+:class:`FallbackSelector` wraps an ordered chain of ``(name, factory)``
+pairs implementing the ``Selector`` protocol.  Each ``plan(epoch)`` call
+uses the first selector in the chain that (a) constructs, (b) returns a
+plan without raising degenerate-math errors, and (c) returns finite
+weights.  Every hop is recorded in ``events`` and stamped into the
+returned plan's provenance (``fallback_from`` / ``fallback_selector``) so
+a degraded run is auditable, never silent.
+
+Only *degenerate-math* failures trigger fallback (``ValueError``,
+``FloatingPointError``, ``ZeroDivisionError``, and the explicit
+:class:`SelectionDegenerateError`).  ``MetadataMismatchError`` is excluded
+even though it subclasses ``ValueError``: loading the wrong artifact is a
+configuration bug that must surface, not a data condition to degrade
+around.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Sequence
+
+import numpy as np
+
+from repro.core.metadata import MetadataMismatchError
+
+#: Exception types treated as "the math is degenerate, try the next tier".
+DEGENERATE_EXCS = (ValueError, FloatingPointError, ZeroDivisionError)
+
+
+class SelectionDegenerateError(ValueError):
+    """Explicit signal that a selector hit degenerate geometry."""
+
+
+class FallbackExhaustedError(RuntimeError):
+    """Every selector in the fallback chain failed."""
+
+
+class FallbackSelector:
+    """``Selector`` that degrades down a declared chain instead of crashing.
+
+    ``chain`` is an ordered sequence of ``(name, factory)`` pairs; each
+    factory is a zero-arg callable returning a built selector.  Factories
+    run lazily — the fallback tiers cost nothing unless reached.  Once the
+    chain advances past a selector it never goes back (a degenerate
+    primary stays degenerate for the run), which also keeps repeat runs
+    bit-identical: the same failures happen at the same points.
+    """
+
+    def __init__(self, chain: Sequence[tuple[str, Callable[[], Any]]]):
+        if not chain:
+            raise ValueError("fallback chain must name at least one selector")
+        self.chain = list(chain)
+        self.events: list[dict[str, Any]] = []
+        self._pos = 0
+        self._sel: Any = None
+
+    @property
+    def active_name(self) -> str:
+        return self.chain[self._pos][0]
+
+    def _advance(self, stage: str, exc: BaseException) -> None:
+        self.events.append({
+            "selector": self.chain[self._pos][0],
+            "stage": stage,
+            "error": repr(exc),
+        })
+        self._pos += 1
+        self._sel = None
+        if self._pos >= len(self.chain):
+            raise FallbackExhaustedError(
+                "every selector in the fallback chain failed: "
+                + "; ".join(f"{e['selector']}({e['stage']}): {e['error']}"
+                            for e in self.events)) from exc
+
+    def _current(self) -> Any:
+        while self._sel is None:
+            _, factory = self.chain[self._pos]
+            try:
+                self._sel = factory()
+            except MetadataMismatchError:
+                raise                      # config bug, never degrade around
+            except DEGENERATE_EXCS as e:
+                self._advance("build", e)
+        return self._sel
+
+    def plan(self, epoch: int):
+        while True:
+            sel = self._current()
+            try:
+                plan = sel.plan(epoch)
+            except MetadataMismatchError:
+                raise
+            except DEGENERATE_EXCS as e:
+                self._advance("plan", e)
+                continue
+            if not np.isfinite(np.asarray(plan.weights)).all():
+                self._advance("plan", SelectionDegenerateError(
+                    "plan weights are non-finite"))
+                continue
+            if self._pos > 0:
+                plan = dataclasses.replace(plan, provenance={
+                    **dict(plan.provenance),
+                    "fallback_from": self.chain[0][0],
+                    "fallback_selector": self.chain[self._pos][0],
+                    "fallback_events": [dict(e) for e in self.events],
+                })
+            return plan
+
+    def reset_cache(self) -> None:
+        sel = self._sel
+        if sel is not None and hasattr(sel, "reset_cache"):
+            sel.reset_cache()

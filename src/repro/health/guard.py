@@ -1,0 +1,106 @@
+"""Training divergence guard: fused non-finite / loss-spike detection.
+
+The guard wraps a ``(state, batch) -> (state, metrics)`` train step so the
+update is *conditionally applied on device*: when the step's loss is
+non-finite (or exceeds a declared spike threshold) every state leaf keeps
+its pre-step value and only the step counter advances.  Because the check
+is a ``jnp.where`` over the already-computed update, it fuses into the
+``lax.scan`` superstep body and costs **zero extra host syncs** on the
+healthy path — the flag rides the metrics stack that training already
+copies out at log boundaries.
+
+The *in-scan* behaviour is always skip-semantics (a NaN update must never
+be applied, or it poisons every subsequent step in the segment); the
+:class:`GuardPolicy` ``action`` says what the host does when it observes
+the flag:
+
+``skip_step``
+    Nothing more — the poisoned update was already a deterministic
+    zero-update; training continues.  Zero added host syncs.
+``rollback``
+    The Trainer restores ``latest_valid_step`` via the PR 7 checkpointer
+    and replays the segment (re-seeded, so the retry is reproducible);
+    flags at or before the rolled-back step are tolerated on replay so a
+    deterministic NaN cannot re-trigger forever.  Costs one scalar
+    device read per segment.
+``abort``
+    Raise :class:`DivergenceError` at the first flagged segment.
+
+Step-counter semantics: skipping must still advance ``state.step``.  If
+the counter were reverted too, the lr schedule would stall and any
+counter-driven fault injector (``nan_at_step``) would re-fire on every
+subsequent invocation — a livelock.  ``NamedTuple`` and dataclass states
+with a ``step`` field get this automatically; other state containers keep
+skip-semantics for every leaf (documented limitation).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+#: Metrics key carrying the per-step flag: 1.0 = step was skipped.
+GUARD_KEY = "guard_bad"
+
+GUARD_ACTIONS = ("skip_step", "rollback", "abort")
+
+
+class DivergenceError(RuntimeError):
+    """Training diverged and the guard policy said not to continue."""
+
+
+@dataclasses.dataclass(frozen=True)
+class GuardPolicy:
+    """Divergence-guard configuration (hashable: part of engine cache keys).
+
+    ``max_loss`` adds an absolute loss-spike threshold on top of the
+    always-on non-finite check; ``loss_key`` names the metric guarded;
+    ``max_rollbacks`` caps checkpoint restores per ``fit`` before the
+    Trainer gives up with :class:`DivergenceError`.
+    """
+
+    action: str = "skip_step"
+    max_loss: float | None = None
+    loss_key: str = "loss"
+    max_rollbacks: int = 4
+
+    def __post_init__(self):
+        if self.action not in GUARD_ACTIONS:
+            raise ValueError(
+                f"guard action must be one of {GUARD_ACTIONS}, "
+                f"got {self.action!r}")
+
+
+def _advance_counter(safe, new_state):
+    """Carry the new step counter onto the reverted state when possible."""
+    if hasattr(safe, "step"):
+        if hasattr(safe, "_replace"):                    # NamedTuple states
+            return safe._replace(step=new_state.step)
+        if dataclasses.is_dataclass(safe):
+            return dataclasses.replace(safe, step=new_state.step)
+    return safe
+
+
+def guarded_step(step_fn, policy: GuardPolicy):
+    """Wrap ``step_fn`` with the fused divergence check.
+
+    Returns a step with the same signature whose metrics gain
+    ``GUARD_KEY`` (0.0 healthy / 1.0 skipped).  Traceable: safe to call
+    inside ``lax.scan`` bodies and under ``jax.jit``.
+    """
+
+    def step(state, batch):
+        new_state, metrics = step_fn(state, batch)
+        loss = metrics[policy.loss_key]
+        ok = jnp.isfinite(loss)
+        if policy.max_loss is not None:
+            ok = jnp.logical_and(ok, loss <= policy.max_loss)
+        safe = jax.tree.map(
+            lambda new, old: jnp.where(ok, new, old), new_state, state)
+        safe = _advance_counter(safe, new_state)
+        out = dict(metrics)
+        out[GUARD_KEY] = 1.0 - ok.astype(jnp.float32)
+        return safe, out
+
+    return step

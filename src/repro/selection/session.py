@@ -96,6 +96,14 @@ class MiloSessionConfig:
     # bucketed SGE candidate counts from the true class geometry instead of
     # the padded bucket's (changes the stochastic draws; see MiloPreprocessor)
     exact_sge_candidates: bool = False
+    # input firewall policy screening the ground set before preprocessing
+    # (None = off): "raise" | "repair" | "quarantine" — see
+    # repro.health.firewall.  Recorded in artifact provenance (data_health).
+    firewall: str | None = None
+    # degraded-mode selection: selector names to fall back to (in order)
+    # when the primary hits degenerate math (e.g. ("adaptive_random",)).
+    # Every hop is recorded in plan provenance — see repro.health.fallback.
+    selector_fallback: tuple[str, ...] = ()
     # curriculum
     total_epochs: int = 40
     kappa: float = 1.0 / 6.0
@@ -145,6 +153,7 @@ class MiloSessionConfig:
             lazy_threshold=self.lazy_threshold,
             lazy_two_level=self.lazy_two_level,
             exact_sge_candidates=self.exact_sge_candidates,
+            firewall=self.firewall,
         )
 
     def resolved_prep_seed(self) -> int:
@@ -411,6 +420,17 @@ class MiloSession:
                 f"{stored_seed} to reuse this artifact with a different "
                 "training seed"
             )
+        # repair/quarantine rewrite the effective ground set, so an artifact
+        # that RECORDS a firewall policy must agree with this session's;
+        # pre-firewall artifacts record none and are accepted on the base
+        # config (same legacy tolerance as the knobs above)
+        stored_fw = md.config.get("firewall")
+        if "firewall" in md.config and stored_fw != cfg.firewall:
+            raise MetadataMismatchError(
+                f"{cfg.metadata_path}: config mismatch on "
+                f"{{'firewall': ({stored_fw!r}, {cfg.firewall!r})}} "
+                "(stored, expected)"
+            )
         return md
 
     def _require_metadata(
@@ -452,7 +472,41 @@ class MiloSession:
         ``milo``/``milo_fixed``/``full``/``random``/``adaptive_random`` are
         wired from session state; other strategies (el2n, craig_pb, ...) take
         their inputs (scores, grad_fn, ...) through ``extra``.
+
+        With ``config.selector_fallback`` declared, the result is a
+        ``repro.health.FallbackSelector`` walking ``(primary, *fallbacks)``:
+        degenerate selection math degrades down the chain (with plan
+        provenance recording every hop) instead of crashing the run.  The
+        fallback tiers are wired from session state only (``extra`` kwargs
+        apply to the primary).
         """
+        cfg = self.config
+        resolved = name or cfg.selector
+        if not cfg.selector_fallback:
+            return self._build_selector(
+                resolved, n=n, epochs=epochs, seed=seed,
+                features=features, **extra,
+            )
+        from repro.health.fallback import FallbackSelector
+
+        def factory(nm: str, ex: dict):
+            return lambda: self._build_selector(
+                nm, n=n, epochs=epochs, seed=seed, features=features, **ex)
+
+        chain = [(resolved, factory(resolved, dict(extra)))]
+        chain += [(fb, factory(fb, {})) for fb in cfg.selector_fallback]
+        return FallbackSelector(chain)
+
+    def _build_selector(
+        self,
+        name: str | None = None,
+        *,
+        n: int,
+        epochs: int | None = None,
+        seed: int | None = None,
+        features: np.ndarray | None = None,
+        **extra: Any,
+    ) -> Selector:
         cfg = self.config
         name = name or cfg.selector
         epochs = epochs if epochs is not None else cfg.total_epochs

@@ -4,7 +4,9 @@
   server: versioned artifact store, warm compiled-program pool, shared
   device buffers, worker-thread request lifecycle (submit/poll/result/
   cancel, deadlines, transient-failure retry under ``RetryPolicy``,
-  structured request log).
+  structured request log, bounded-queue admission raising
+  ``ServerOverloadedError``, per-key ``CircuitBreaker`` around artifact
+  builds, ``health()`` endpoint).
 * ``ArtifactStore`` — (data_fingerprint, config_hash)-keyed two-tier
   (memory LRU + disk) ``MiloMetadata`` store with single-flight builds,
   pinning, and per-key versions.
@@ -13,6 +15,7 @@
 * ``ServeEngine`` (``repro.serve.lm_engine``) — the separate batched LM
   decode engine; unrelated workload, same package.
 """
+from repro.health.breaker import CircuitBreaker, CircuitOpenError
 from repro.serve.buffers import BufferRegistry, array_fingerprint
 from repro.serve.server import (
     CANCELLED,
@@ -25,6 +28,7 @@ from repro.serve.server import (
     MiloServer,
     RetryPolicy,
     ServeRequest,
+    ServerOverloadedError,
     TransientServeError,
     artifact_request_config,
 )
@@ -35,10 +39,13 @@ __all__ = [
     "ArtifactKey",
     "ArtifactStore",
     "BufferRegistry",
+    "CircuitBreaker",
+    "CircuitOpenError",
     "MiloClient",
     "MiloServer",
     "RetryPolicy",
     "ServeRequest",
+    "ServerOverloadedError",
     "TransientServeError",
     "array_fingerprint",
     "artifact_request_config",

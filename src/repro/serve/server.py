@@ -24,7 +24,14 @@ a long-lived process that N tenants submit train/tune requests to, where
     retries transient ones under ``RetryPolicy`` (exponential backoff with
     deterministic jitter, interruptible by cancel), and appends one
     structured row per request — including its attempt count — to the
-    request log.
+    request log;
+  * the **hardening layer** (PR 8) bounds the queue — ``submit`` raises
+    ``ServerOverloadedError`` synchronously at ``max_queue`` pending
+    requests instead of accepting unbounded work — and puts a per-key
+    ``repro.health.CircuitBreaker`` around artifact builds, so a key whose
+    build fails deterministically fast-fails (``CircuitOpenError``) after
+    ``threshold`` consecutive failures while cached artifacts keep serving;
+    ``health()`` reports ok/degraded with the evidence.
 
 ``MiloClient`` is the thin synchronous facade a tenant holds; the transport
 is in-process (function calls + queues), which is where the interesting
@@ -45,6 +52,7 @@ from typing import Any, Callable
 import numpy as np
 
 from repro.core.metadata import MiloMetadata, config_hash
+from repro.health.breaker import CircuitBreaker, CircuitOpenError
 from repro.selection.session import (
     MiloSession,
     MiloSessionConfig,
@@ -64,6 +72,16 @@ def _with_overrides(
     ov = dict(overrides)
     ov["metadata_path"] = None
     return dataclasses.replace(cfg, **ov)
+
+class ServerOverloadedError(RuntimeError):
+    """Fast-fail at admission: the submit queue is at ``max_queue``.
+
+    Raised synchronously from :meth:`MiloServer.submit` — the request is
+    never enqueued, so the caller can shed load or back off on its own
+    schedule instead of silently deepening an unbounded queue.  Deliberately
+    not transient: retrying into a full queue is the problem, not the fix.
+    """
+
 
 class TransientServeError(RuntimeError):
     """An error the server should retry: the failure is a property of the
@@ -218,11 +236,15 @@ class MiloServer:
         store_capacity: int = 8,
         num_workers: int = 2,
         retry_policy: RetryPolicy | None = None,
+        max_queue: int = 256,
+        breaker: CircuitBreaker | None = None,
         **config_overrides: Any,
     ):
         cfg = config if config is not None else MiloSessionConfig()
         if config_overrides:
             cfg = dataclasses.replace(cfg, **config_overrides)
+        if max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1, got {max_queue}")
         # the store owns persistence; a session-level metadata_path would
         # write a second, unversioned copy outside the server's control
         self.config = dataclasses.replace(cfg, metadata_path=None)
@@ -231,6 +253,13 @@ class MiloServer:
         self.num_workers = max(1, int(num_workers))
         self.retry_policy = (retry_policy if retry_policy is not None
                              else RetryPolicy())
+        self.max_queue = int(max_queue)
+        # per-artifact-key circuit breaker around store builds: a key whose
+        # build fails deterministically stops burning worker time after
+        # `threshold` consecutive failures (fast CircuitOpenError instead),
+        # while cached artifacts for that key keep serving
+        self.breaker = breaker if breaker is not None else CircuitBreaker()
+        self._queued = 0          # admission-controlled queue depth
         self._retries = 0         # transient failures that were retried
         self._failures = 0        # requests that terminated in ERROR
         self._sessions: dict[tuple, MiloSession] = {}
@@ -319,6 +348,13 @@ class MiloServer:
             submitted=time.time(),
         )
         with self._lock:
+            # bounded admission: fail fast at submit time rather than
+            # accepting work the workers are hopelessly behind on
+            if self._queued >= self.max_queue:
+                raise ServerOverloadedError(
+                    f"queue full ({self._queued}/{self.max_queue} requests "
+                    f"pending); retry later or raise max_queue")
+            self._queued += 1
             self._requests[req.request_id] = req
         self._queue.put(req)
         return req.request_id
@@ -370,6 +406,38 @@ class MiloServer:
             "buffers": self.buffers.stats(),
             "sessions": len(self._sessions),
             "warmed": len(self._warmed),
+        }
+
+    def health(self) -> dict[str, Any]:
+        """Operational health snapshot (JSON-safe).
+
+        ``status`` is ``"ok"`` when the server is accepting work with every
+        circuit closed, ``"degraded"`` when any artifact key's breaker is
+        open/half-open or the queue is at capacity, and ``"stopped"`` after
+        shutdown.  The rest is the evidence: queue depth vs. limit, the
+        per-key breaker snapshot, store/retry/failure counters.
+        """
+        with self._lock:
+            started = self._started
+            queued = self._queued
+            retries, failures = self._retries, self._failures
+        breakers = self.breaker.snapshot()
+        tripped = sorted(
+            k for k, st in breakers.items() if st["state"] != "closed")
+        if not started:
+            status = "stopped"
+        elif tripped or queued >= self.max_queue:
+            status = "degraded"
+        else:
+            status = "ok"
+        return {
+            "status": status,
+            "queue": {"depth": queued, "limit": self.max_queue},
+            "breakers": breakers,
+            "tripped_keys": tripped,
+            "retries": retries,
+            "failures": failures,
+            "store": self.store.stats(),
         }
 
     # -- warm pool ----------------------------------------------------------
@@ -475,10 +543,24 @@ class MiloServer:
         fp = self.data_fingerprint(features)
         key = self.store.key_for(fp, req_config)
         session = self._session_for(key, cfg)
+
+        def guarded_build() -> MiloMetadata:
+            # the breaker gates BUILDS only — memory/disk hits for the key
+            # keep serving while its circuit is open (a cached artifact is
+            # fine; re-paying a deterministically-failing build is not)
+            self.breaker.check(key)
+            try:
+                md = session.build_metadata(features, labels, fingerprint=fp)
+            except CircuitOpenError:
+                raise
+            except BaseException:
+                self.breaker.record_failure(key)
+                raise
+            self.breaker.record_success(key)
+            return md
+
         md, entry, source = self.store.get_or_build(
-            key, req_config,
-            lambda: session.build_metadata(features, labels, fingerprint=fp),
-            pin=pin, force=force,
+            key, req_config, guarded_build, pin=pin, force=force,
         )
         if session.metadata is not md:
             session.adopt_metadata(md, loaded=source != "built")
@@ -501,6 +583,8 @@ class MiloServer:
             req = self._queue.get()
             if req is None:
                 return
+            with self._lock:
+                self._queued -= 1
             self._execute(req)
 
     def _finish(self, req: ServeRequest, status: str) -> None:

@@ -77,6 +77,9 @@ class ArtifactStore:
         )
         self._entries: dict[ArtifactKey, ArtifactEntry] = {}
         self._flights: dict[ArtifactKey, threading.Lock] = {}
+        #: consecutive build failures per key (reset by a successful build);
+        #: the observable MiloServer's circuit breaker trips on
+        self._key_failures: dict[ArtifactKey, int] = {}
         self.builds = 0
         self.build_failures = 0
         self.hits = 0
@@ -158,9 +161,11 @@ class ArtifactStore:
                 # lock the dead builder never released.
                 with self._lock:
                     self.build_failures += 1
+                    self._key_failures[key] = self._key_failures.get(key, 0) + 1
                 raise
             with self._lock:
                 self.builds += 1
+                self._key_failures.pop(key, None)
                 entry = self._entries.get(key)
                 if entry is None:
                     entry = ArtifactEntry(key=key, version=1,
@@ -244,6 +249,11 @@ class ArtifactStore:
         with self._lock:
             return key in self._memory
 
+    def failures_for(self, key: ArtifactKey) -> int:
+        """Consecutive build failures for ``key`` since its last success."""
+        with self._lock:
+            return self._key_failures.get(key, 0)
+
     def entries(self) -> list[ArtifactEntry]:
         with self._lock:
             return [dataclasses.replace(e) for e in self._entries.values()]
@@ -253,6 +263,7 @@ class ArtifactStore:
             return {
                 "builds": self.builds,
                 "build_failures": self.build_failures,
+                "failing_keys": len(self._key_failures),
                 "hits": self.hits,
                 "disk_loads": self.disk_loads,
                 "evictions": self.evictions,

@@ -22,6 +22,14 @@ survive):
     straggler-detection tests with a known ground truth.
   * ``corrupt_checkpoint`` — truncate or bit-flip a written checkpoint's
     shard / manifest, for ``latest_valid_step`` skip-torn-checkpoint tests.
+  * ``nan_at_step``     — poisons one exact training step's update and loss
+    with NaN *inside the trace* (scan-compatible), the ground truth for
+    divergence-guard skip/rollback tests.
+  * ``poison_features`` — plants non-finite / zero rows at exact indices in
+    a feature matrix, the ground truth for input-firewall tests.
+  * ``fail_objective_for_configs`` — scripted hyperband objective failures
+    for an exact set of configs, the ground truth for trial-quarantine
+    tests.
 """
 from __future__ import annotations
 
@@ -146,6 +154,100 @@ def slow_steps(
         return train_step(*args, **kwargs)
 
     wrapper.calls = 0
+    return wrapper
+
+
+def nan_at_step(
+    train_step: Callable[..., Any], *, step: int
+) -> Callable[..., Any]:
+    """Wrap a train step so the step numbered ``step`` diverges to NaN.
+
+    The fault fires when the *incoming* ``state.step`` counter equals
+    ``step`` (the state the trainer's global step tracks), implemented with
+    ``jnp.where`` on a traced predicate — so it works identically under the
+    per-batch loop and inside a fused ``lax.scan`` superstep, and the same
+    schedule replays bit-identically after a crash.  Every floating leaf of
+    the new state and metrics is poisoned (a real divergence takes the
+    parameters with it, not just the loss), so an unguarded run is visibly
+    wrecked from this step on while a guarded run must skip or roll back.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    target = int(step)
+
+    @functools.wraps(train_step)
+    def wrapper(state: Any, batch: Any) -> Any:
+        new_state, metrics = train_step(state, batch)
+        hit = state.step == target
+
+        def nanify(x):
+            x = jnp.asarray(x)
+            if not jnp.issubdtype(x.dtype, jnp.floating):
+                return x
+            return jnp.where(hit, jnp.full_like(x, jnp.nan), x)
+
+        return jax.tree.map(nanify, new_state), jax.tree.map(nanify, metrics)
+
+    return wrapper
+
+
+def poison_features(
+    features: Any,
+    *,
+    nan_rows: Collection[int] = (),
+    inf_rows: Collection[int] = (),
+    zero_rows: Collection[int] = (),
+) -> Any:
+    """Return a copy of ``features`` with exact rows poisoned.
+
+    ``nan_rows`` / ``inf_rows`` become all-NaN / all-inf (non-finite input),
+    ``zero_rows`` become exact zero vectors (the silent ``normalize_rows``
+    hazard the firewall screens for).  Indices are explicit — never sampled
+    — so every firewall test has a known ground truth to assert against.
+    """
+    import numpy as np
+
+    out = np.array(features, copy=True)
+    if not np.issubdtype(out.dtype, np.floating):
+        raise TypeError(
+            f"poison_features needs a floating dtype to hold NaN/inf, "
+            f"got {out.dtype}")
+    for i in nan_rows:
+        out[int(i)] = np.nan
+    for i in inf_rows:
+        out[int(i)] = np.inf
+    for i in zero_rows:
+        out[int(i)] = 0.0
+    return out
+
+
+def fail_objective_for_configs(
+    objective: Callable[..., Any],
+    *,
+    fail_configs: Collection[dict],
+    exc: Callable[[str], BaseException] = FaultInjected,
+) -> Callable[..., Any]:
+    """Wrap a hyperband objective to raise for an exact set of configs.
+
+    Configs are matched structurally (``tuple(sorted(cfg.items()))``), so a
+    scripted failure follows its trial through every rung it is promoted to
+    — the deterministic analogue of "this hyperparameter combination always
+    diverges".  The wrapper exposes ``calls`` and ``failures_injected``
+    counters for assertions.
+    """
+    fail_set = frozenset(tuple(sorted(c.items())) for c in fail_configs)
+
+    @functools.wraps(objective)
+    def wrapper(config: dict, budget: Any) -> Any:
+        wrapper.calls += 1
+        if tuple(sorted(config.items())) in fail_set:
+            wrapper.failures_injected += 1
+            raise exc(f"injected objective failure for config {config!r}")
+        return objective(config, budget)
+
+    wrapper.calls = 0
+    wrapper.failures_injected = 0
     return wrapper
 
 

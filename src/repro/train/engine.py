@@ -30,9 +30,15 @@ the trainer cuts supersteps into segments that end exactly on
 ``checkpoint_every_steps`` multiples (``segment_length``); restart replay
 stays a pure function of (seed, epoch, step).
 
-Programs are cached per (train_step, weight_key, donate) — a Hyperband sweep
-building one ``Trainer`` per trial reuses one compiled superstep per segment
-shape instead of recompiling every trial.
+Programs are cached per (train_step, weight_key, donate, guard) — a
+Hyperband sweep building one ``Trainer`` per trial reuses one compiled
+superstep per segment shape instead of recompiling every trial.
+
+With a ``guard`` (``repro.health.GuardPolicy``) the divergence check is
+fused *inside* the scan body: a step whose loss goes non-finite (or spikes
+past ``max_loss``) becomes a deterministic zero-update on device and its
+``guard_bad`` flag rides the stacked metrics — zero extra host syncs on
+the healthy path.
 """
 from __future__ import annotations
 
@@ -41,12 +47,18 @@ from typing import Any, Callable
 
 import jax
 
+from repro.health.guard import GuardPolicy, guarded_step
 from repro.train.train_state import TrainState
 
 TrainStep = Callable[[TrainState, dict], tuple[TrainState, dict]]
 
 
-def make_superstep(train_step: TrainStep, *, donate: bool = True):
+def make_superstep(
+    train_step: TrainStep,
+    *,
+    donate: bool = True,
+    guard: GuardPolicy | None = None,
+):
     """Fuse a stack of pre-assembled batches into one scan.
 
     Returns ``superstep(state, batches) -> (state, stacked_metrics)`` where
@@ -54,17 +66,18 @@ def make_superstep(train_step: TrainStep, *, donate: bool = True):
     ``donate=True`` (default) the input state's buffers are donated to the
     program — invalidated on call, reused for the output state.
     """
+    step = guarded_step(train_step, guard) if guard is not None else train_step
 
     def superstep(state: TrainState, batches: dict):
         def body(st, batch):
-            return train_step(st, batch)
+            return step(st, batch)
 
         return jax.lax.scan(body, state, batches)
 
     return jax.jit(superstep, donate_argnums=(0,) if donate else ())
 
 
-#: train_step -> {(weight_key, donate): engine}.  Keyed on the step *object*
+#: train_step -> {(weight_key, donate, guard): engine}.  Keyed on the step *object*
 #: on purpose: the session/bench step factories memoize their jitted steps,
 #: so every Trainer built around the same step shares one engine (and its
 #: per-segment-shape executables).  Weakly keyed so per-instance steps (a
@@ -78,6 +91,7 @@ def epoch_engine(
     *,
     weight_key: str | None = "weights",
     donate: bool = True,
+    guard: GuardPolicy | None = None,
 ):
     """Superstep over device-resident data.
 
@@ -92,10 +106,12 @@ def epoch_engine(
     (``{k: buf[k][idx[t]]}``), injects ``w[t]`` under ``weight_key`` (unless
     a buffer already claims that column, mirroring the host pipeline's
     "don't clobber" rule), and applies ``train_step``.  The state is donated;
-    the buffers are not.
+    the buffers are not.  A ``guard`` fuses the divergence check into the
+    body (see module docstring); ``GuardPolicy`` is hashable, so guarded
+    and unguarded engines coexist in the cache.
     """
     per_step = _ENGINE_CACHE.setdefault(train_step, {})
-    engine = per_step.get((weight_key, donate))
+    engine = per_step.get((weight_key, donate, guard))
     if engine is not None:
         return engine
 
@@ -108,6 +124,8 @@ def epoch_engine(
     def engine_fn(state: TrainState, buffers: dict, idx, w):
         step = step_ref()
         assert step is not None, "train_step was garbage-collected"
+        if guard is not None:
+            step = guarded_step(step, guard)
 
         def body(st, step_inputs):
             bidx, bw = step_inputs
@@ -119,7 +137,7 @@ def epoch_engine(
         return jax.lax.scan(body, state, (idx, w))
 
     engine = jax.jit(engine_fn, donate_argnums=(0,) if donate else ())
-    per_step[(weight_key, donate)] = engine
+    per_step[(weight_key, donate, guard)] = engine
     return engine
 
 

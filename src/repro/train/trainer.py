@@ -51,8 +51,24 @@ from repro.distributed.fault_tolerance import (
     elastic_plan,
     restart_state,
 )
+from repro.health import guard as guard_mod
+from repro.health.guard import DivergenceError, GuardPolicy
 from repro.train import engine as engine_mod
 from repro.train.train_state import TrainState
+
+
+class _GuardRollback(Exception):
+    """Internal control flow: a segment tripped the rollback guard.
+
+    Carries the step the bad segment ended on and the (valid, post-skip)
+    state to use as the restore template — the pre-segment state's buffers
+    were donated to the engine and must not be touched again.
+    """
+
+    def __init__(self, step: int, state: TrainState):
+        super().__init__(f"guard rollback at step {step}")
+        self.step = step
+        self.state = state
 
 
 @dataclasses.dataclass
@@ -77,6 +93,17 @@ class TrainerConfig:
     # metrics, same order — only the wall timestamps move); False restores
     # the in-line copy for A/B tests.
     async_history: bool = True
+    # Divergence guard (repro.health.GuardPolicy) or None.  The non-finite
+    # / loss-spike check is fused into the step (engine scan body on the
+    # fused path): a flagged step is a deterministic zero-update on device.
+    # action="skip_step" adds ZERO host syncs — the flag rides the metrics
+    # already drained at log boundaries; "rollback"/"abort" read one small
+    # flag vector per segment (per step on the loop path) to decide.
+    # "rollback" restores latest_valid_step via the checkpointer and
+    # replays the stretch deterministically; flags at or before the
+    # rolled-back step are tolerated on replay (skip semantics) so a
+    # deterministic NaN cannot re-trigger forever.
+    guard: GuardPolicy | None = None
 
 
 class Trainer:
@@ -118,6 +145,19 @@ class Trainer:
         # elastic-restart plan computed when a resume sees a different
         # device count than the checkpoint's writer (None otherwise)
         self.elastic: ElasticPlan | None = None
+        self.guard = tcfg.guard
+        self.guard_events: list[dict] = []
+        self._guard_skips = 0
+        self._guard_rollbacks = 0
+        # steps at/before this mark had their rollback consumed: on replay
+        # the deterministic fault re-fires and is tolerated as a skip
+        self._tolerate_through = -1
+        # loop-path step with the guard fused in (the fused path gets it
+        # inside the engine's scan body instead)
+        self._step = (
+            jax.jit(guard_mod.guarded_step(self.train_step, self.guard))
+            if self.guard is not None else self.train_step
+        )
 
     def fused_active(self) -> bool:
         """Whether fit() will take the device-resident fused path."""
@@ -195,7 +235,8 @@ class Trainer:
 
     def _engine(self):
         return engine_mod.epoch_engine(
-            self.train_step, weight_key=self.pipeline.weight_key
+            self.train_step, weight_key=self.pipeline.weight_key,
+            guard=self.guard,
         )
 
     def _resident_buffers(self) -> dict:
@@ -226,6 +267,14 @@ class Trainer:
                 state, buffers, idx[pos : pos + seg], w[pos : pos + seg]
             )
             slow = self.monitor.stop(global_step + seg)
+            # rollback/abort must decide BEFORE this segment's state can be
+            # checkpointed; skip_step stays sync-free (flag rides the drain)
+            if self.guard is not None and self.guard.action != "skip_step":
+                bad = int(np.sum(
+                    np.asarray(jax.device_get(metrics[guard_mod.GUARD_KEY]))
+                    > 0))
+                if bad:
+                    self._on_guard_bad(bad, global_step + seg, epoch, state)
             log_every = self.tcfg.log_every_steps
             # only sync the stacked metrics to host when a log boundary
             # actually falls inside this segment — log-free segments keep
@@ -270,6 +319,18 @@ class Trainer:
         host = jax.device_get(metrics)
         wall = round(time.time() - t0, 2)
         log_every = self.tcfg.log_every_steps
+        if self.guard is not None and guard_mod.GUARD_KEY in host:
+            # skip events are observed here, off the copy the drain already
+            # pays — the healthy path gains no syncs from the guard.  For
+            # rollback policies the segments that reach the drain were
+            # clean or tolerated, so flagged steps here are skips too.
+            for i in np.where(np.asarray(host[guard_mod.GUARD_KEY]) > 0)[0]:
+                self._guard_skips += 1
+                self.guard_events.append({
+                    "action": "skip_step",
+                    "step": global_step + int(i) + 1,
+                    "epoch": epoch,
+                })
         for i in range(seg):
             step_i = global_step + i + 1
             if step_i % log_every:
@@ -279,6 +340,85 @@ class Trainer:
             if phase is not None:
                 rec["phase"] = phase
             self.history.append(rec)
+
+    # -- divergence guard (repro.health.guard) ------------------------------
+
+    def _on_guard_bad(
+        self, bad: int, end_step: int, epoch: int, state: TrainState
+    ) -> None:
+        """Host-side reaction to flagged steps in the stretch ending at
+        ``end_step`` (the device already applied skip semantics)."""
+        policy = self.guard
+        if end_step <= self._tolerate_through:
+            # replaying a rolled-back stretch: the deterministic fault
+            # re-fired, exactly as expected — keep the skip and move on
+            # (the drain records it as a skip event)
+            return
+        if policy.action == "abort":
+            raise DivergenceError(
+                f"training diverged: {bad} non-finite/spiking step(s) in "
+                f"the stretch ending at step {end_step} (epoch {epoch}) "
+                f"and GuardPolicy.action='abort'")
+        self._guard_rollbacks += 1
+        if self._guard_rollbacks > policy.max_rollbacks:
+            raise DivergenceError(
+                f"training diverged at step {end_step} after exhausting "
+                f"max_rollbacks={policy.max_rollbacks} checkpoint restores")
+        self.guard_events.append({
+            "action": "rollback", "step": int(end_step),
+            "epoch": int(epoch), "bad_steps": int(bad),
+        })
+        raise _GuardRollback(end_step, state)
+
+    def _guard_restore(
+        self, rb: _GuardRollback, t0: float
+    ) -> tuple[TrainState, int]:
+        """Restore the newest valid checkpoint and rewind history to it."""
+        if self.ckpt is None:
+            raise DivergenceError(
+                f"guard action 'rollback' tripped at step {rb.step} but no "
+                "checkpoint_dir is configured — set TrainerConfig."
+                "checkpoint_dir/checkpoint_every_steps or use 'skip_step'")
+        # the still-pending previous segment may precede the restore point:
+        # drain it (the truncation below keeps only records <= latest)
+        self._drain_history(t0)
+        self.ckpt.wait()               # in-flight async saves must land
+        latest = self.ckpt.latest_valid_step()
+        if latest is None:
+            raise DivergenceError(
+                f"guard: divergence at step {rb.step} with no valid "
+                "checkpoint to roll back to")
+        state = self.ckpt.restore(latest, rb.state)
+        self._tolerate_through = rb.step
+        # data/eval records past the restore point get re-written by the
+        # replay; the guard marker records stay
+        self.history = [
+            h for h in self.history
+            if h.get("step", 0) <= latest or h.get("guard")
+        ]
+        self.history.append({
+            "guard": "rollback", "step": int(rb.step),
+            "restored_step": int(latest),
+            "wall": round(time.time() - t0, 2),
+        })
+        return state, latest
+
+    def guard_report(self) -> dict | None:
+        """Run-level divergence-guard roll-up (None when nothing tripped).
+
+        Mirrors ``straggler_report()``: per-step flags already ride the
+        history records (``guard_bad``); this aggregates skip/rollback
+        events without touching the history stream.
+        """
+        if not (self.guard_events or self._guard_skips
+                or self._guard_rollbacks):
+            return None
+        return {
+            "action": self.guard.action if self.guard else None,
+            "skipped_steps": int(self._guard_skips),
+            "rollbacks": int(self._guard_rollbacks),
+            "events": [dict(e) for e in self.guard_events],
+        }
 
     def warm_fused(self, throwaway: TrainState) -> None:
         """Compile the fused segment programs outside any timed region.
@@ -321,39 +461,68 @@ class Trainer:
         start_epoch, start_step = cursor["epoch"], cursor["step_in_epoch"]
         fused = self.fused_active()
 
-        for epoch in range(start_epoch, self.tcfg.epochs):
+        epoch = start_epoch
+        while epoch < self.tcfg.epochs:
             phase = self._epoch_phase(epoch)
-            if fused:
-                state, global_step = self._fused_epoch(
+            run_epoch = self._fused_epoch if fused else self._loop_epoch
+            try:
+                state, global_step = run_epoch(
                     state, epoch,
                     start_step if epoch == start_epoch else 0,
                     global_step, t0, phase,
                 )
-                self._maybe_eval(state, epoch, global_step, t0)
+            except _GuardRollback as rb:
+                state, global_step = self._guard_restore(rb, t0)
+                # re-derive the deterministic cursor at the restored step:
+                # the replayed stretch sees the identical batch stream
+                cursor = restart_state(
+                    self.pipeline.seed, global_step, max(steps_per_epoch, 1)
+                )
+                start_epoch, start_step = (
+                    cursor["epoch"], cursor["step_in_epoch"])
+                epoch = start_epoch
                 continue
-            for batch in self.pipeline.epoch(epoch, start_step=start_step if epoch == start_epoch else 0):
-                self.monitor.start()
-                state, metrics = self.train_step(state, self.put_batch(batch))
-                slow = self.monitor.stop(global_step)
-                global_step += 1
-                if self.tcfg.log_every_steps and global_step % self.tcfg.log_every_steps == 0:
-                    rec = {k: float(v) for k, v in metrics.items()}
-                    rec.update(step=global_step, epoch=epoch,
-                               wall=round(time.time() - t0, 2), straggler=slow)
-                    if phase is not None:
-                        rec["phase"] = phase
-                    self.history.append(rec)
-                if (
-                    self.ckpt is not None
-                    and self.tcfg.checkpoint_every_steps
-                    and global_step % self.tcfg.checkpoint_every_steps == 0
-                ):
-                    self._save_checkpoint(global_step, state)
             self._maybe_eval(state, epoch, global_step, t0)
+            epoch += 1
         if self.ckpt is not None:
             self.ckpt.wait()
             self.ckpt.save(global_step, state, extra=self._ckpt_extra())
         return state
+
+    def _loop_epoch(
+        self, state: TrainState, epoch: int, start_step: int,
+        global_step: int, t0: float, phase: str | None,
+    ) -> tuple[TrainState, int]:
+        """One epoch on the per-batch step loop; returns (state, step)."""
+        guard_sync = (
+            self.guard is not None and self.guard.action != "skip_step")
+        for batch in self.pipeline.epoch(epoch, start_step=start_step):
+            self.monitor.start()
+            state, metrics = self._step(state, self.put_batch(batch))
+            slow = self.monitor.stop(global_step)
+            global_step += 1
+            if guard_sync and float(metrics[guard_mod.GUARD_KEY]) > 0:
+                self._on_guard_bad(1, global_step, epoch, state)
+            if self.tcfg.log_every_steps and global_step % self.tcfg.log_every_steps == 0:
+                rec = {k: float(v) for k, v in metrics.items()}
+                rec.update(step=global_step, epoch=epoch,
+                           wall=round(time.time() - t0, 2), straggler=slow)
+                if phase is not None:
+                    rec["phase"] = phase
+                self.history.append(rec)
+                if rec.get(guard_mod.GUARD_KEY, 0.0) > 0:
+                    self._guard_skips += 1
+                    self.guard_events.append({
+                        "action": "skip_step", "step": global_step,
+                        "epoch": epoch,
+                    })
+            if (
+                self.ckpt is not None
+                and self.tcfg.checkpoint_every_steps
+                and global_step % self.tcfg.checkpoint_every_steps == 0
+            ):
+                self._save_checkpoint(global_step, state)
+        return state, global_step
 
     def straggler_report(self) -> dict | None:
         """Run-level straggler roll-up (None when nothing was flagged).

@@ -128,6 +128,10 @@ class HyperbandResult:
     # cancellation / deadline): best_config/trials cover the rungs that
     # actually ran.  A completed run always records False.
     stopped: bool = False
+    # Evaluations quarantined by the trial guard: the objective raised or
+    # returned a non-finite score, the trial was recorded failed-with--inf
+    # and the sweep continued (see hyperband docstring).
+    failed_trials: int = 0
 
 
 def subset_objective(
@@ -191,6 +195,14 @@ def _hb_write_checkpoint(path: str, state: dict) -> None:
     os.replace(tmp, path)
 
 
+#: Keys every complete rung checkpoint carries (see ``write_state``): a
+#: file missing any of them is torn/partial even when it parses as JSON.
+_HB_REQUIRED_KEYS = (
+    "bracket", "rung", "configs", "bracket_n", "trials", "history",
+    "best_config", "best_score", "total_epochs", "search_state", "wall_time",
+)
+
+
 def _hb_load_checkpoint(path: str, identity: dict) -> dict | None:
     if not os.path.exists(path):
         return None
@@ -200,6 +212,12 @@ def _hb_load_checkpoint(path: str, identity: dict) -> dict | None:
     except (json.JSONDecodeError, UnicodeDecodeError) as e:
         raise ValueError(
             f"{path}: corrupt hyperband checkpoint ({e}); delete it to "
+            "restart the sweep from scratch"
+        )
+    if not isinstance(state, dict):
+        raise ValueError(
+            f"{path}: corrupt hyperband checkpoint (top-level JSON is "
+            f"{type(state).__name__}, expected object); delete it to "
             "restart the sweep from scratch"
         )
     if state.get("format") != HB_CHECKPOINT_FORMAT:
@@ -212,6 +230,15 @@ def _hb_load_checkpoint(path: str, identity: dict) -> dict | None:
             f"{path}: checkpoint belongs to a different sweep "
             f"(stored {state.get('identity')}, this run {identity}); "
             "point `checkpoint` elsewhere or delete the file"
+        )
+    # a truncated file whose prefix still parses (or a write interrupted
+    # between schema versions) must surface as the same clean identity
+    # error, not as a KeyError deep inside the resume bookkeeping
+    missing = [k for k in _HB_REQUIRED_KEYS if k not in state]
+    if missing:
+        raise ValueError(
+            f"{path}: corrupt hyperband checkpoint (missing keys "
+            f"{missing}); delete it to restart the sweep from scratch"
         )
     return state
 
@@ -241,6 +268,19 @@ def hyperband(
     whose objectives return the same scores produce the identical
     ``best_config`` and trial set.  When provided, ``objective`` may be None.
 
+    **Trial quarantine:** a sequential ``objective`` that raises, or an
+    evaluation (either path) that returns a non-finite score, marks that
+    trial failed-with--inf — recorded on the trial dict as
+    ``failed``/``error`` — and the sweep continues; one poisoned config can
+    no longer kill a whole sweep.  Failed evaluations lose every halving
+    comparison, so they never advance a rung, and ``best_config`` over the
+    surviving trials is identical to a sweep where the failing configs
+    scored arbitrarily badly.  Only when EVERY evaluation failed does the
+    sweep raise (``RuntimeError`` carrying the first error) — an
+    all-failing objective is a harness bug, not bad luck.  Exceptions from
+    ``batched_objective`` still propagate: one call covers the whole rung,
+    so there is no per-trial failure to isolate.
+
     ``should_stop()`` is polled before every rung evaluation — the
     server-driven hook (``repro.serve.MiloServer``) that lets a tuning
     request honor a deadline or cancellation between rungs.  A True poll
@@ -267,20 +307,30 @@ def hyperband(
     best_config, best_score = None, -np.inf
     total_epochs = 0
     stopped = False
+    failed = 0
+    first_error: str | None = None
 
     identity = _hb_identity(search, max_budget, eta)
     resume = _hb_load_checkpoint(checkpoint, identity) if checkpoint else None
     if resume is not None:
-        trials = resume["trials"]
-        history = [(c, float(v)) for c, v in resume["history"]]
-        best_config = resume["best_config"]
-        best_score = float(resume["best_score"])
-        total_epochs = int(resume["total_epochs"])
-        search.set_state(resume["search_state"])
+        try:
+            trials = resume["trials"]
+            history = [(c, float(v)) for c, v in resume["history"]]
+            best_config = resume["best_config"]
+            best_score = float(resume["best_score"])
+            total_epochs = int(resume["total_epochs"])
+            search.set_state(resume["search_state"])
+        except (KeyError, TypeError, ValueError) as e:
+            # belt-and-braces behind _hb_load_checkpoint's key check:
+            # malformed VALUES surface as the same clean identity error
+            raise ValueError(
+                f"{checkpoint}: corrupt hyperband checkpoint ({e!r}); "
+                "delete it to restart the sweep from scratch") from e
+        failed = sum(1 for t in trials if t.get("failed"))
         if resume.get("done"):
             return HyperbandResult(best_config, best_score, trials,
                                    total_epochs, float(resume["wall_time"]),
-                                   stopped=False)
+                                   stopped=False, failed_trials=failed)
 
     def write_state(bracket: int, rung: int, configs, n: int | None,
                     done: bool) -> None:
@@ -327,19 +377,45 @@ def hyperband(
                 break
             n_i = int(n * eta ** (-i))
             r_i = max(1, int(round(r * eta ** i)))
+            # (score, error): error is None for a healthy evaluation; a
+            # raised/non-finite evaluation is quarantined at -inf so it
+            # loses every halving comparison but cannot kill the sweep
+            outcomes: list[tuple[float, str | None]] = []
             if batched_objective is not None:
-                results = [float(v) for v in batched_objective(list(configs), r_i)]
-                if len(results) != len(configs):
+                scores = [float(v) for v in batched_objective(list(configs), r_i)]
+                if len(scores) != len(configs):
                     raise ValueError(
-                        f"batched_objective returned {len(results)} scores "
+                        f"batched_objective returned {len(scores)} scores "
                         f"for {len(configs)} configs"
                     )
+                outcomes = [
+                    (v, None) if math.isfinite(v)
+                    else (-np.inf, f"non-finite score {v!r}")
+                    for v in scores
+                ]
             else:
-                results = [float(objective(cfg, r_i)) for cfg in configs]
-            for cfg, score in zip(configs, results):
+                for cfg in configs:
+                    try:
+                        v = float(objective(cfg, r_i))
+                    except Exception as e:  # noqa: BLE001 — trial isolation
+                        outcomes.append((-np.inf, repr(e)))
+                    else:
+                        outcomes.append(
+                            (v, None) if math.isfinite(v)
+                            else (-np.inf, f"non-finite score {v!r}"))
+            results = [v for v, _ in outcomes]
+            for cfg, (score, err) in zip(configs, outcomes):
                 total_epochs += r_i
                 history.append((cfg, score))
-                trials.append({"config": cfg, "budget": r_i, "score": score, "bracket": s})
+                trial = {"config": cfg, "budget": r_i, "score": score,
+                         "bracket": s}
+                if err is not None:
+                    trial["failed"] = True
+                    trial["error"] = err
+                    failed += 1
+                    if first_error is None:
+                        first_error = err
+                trials.append(trial)
                 if score > best_score:
                     best_config, best_score = cfg, score
             order = np.argsort(results)[::-1]
@@ -355,8 +431,14 @@ def hyperband(
             if len(configs) <= 1 and i < s:
                 # nothing left to halve; finish bracket with the survivor
                 continue
+    if trials and failed == len(trials):
+        raise RuntimeError(
+            f"hyperband: all {len(trials)} trial evaluations failed "
+            f"(first error: {first_error}) — quarantine keeps a sweep "
+            "alive through bad configs, not through a broken objective")
     return HyperbandResult(best_config, float(best_score), trials, total_epochs,
-                           time.time() - t0, stopped=stopped)
+                           time.time() - t0, stopped=stopped,
+                           failed_trials=failed)
 
 
 def kendall_tau(a: np.ndarray, b: np.ndarray) -> float:

@@ -1,0 +1,807 @@
+"""Numerical-health guardrail layer (ISSUE 8): input firewall, divergence
+guard, trial quarantine, and degraded-mode fallbacks.
+
+The load-bearing claims pinned here:
+  * the input firewall catches every planted anomaly (non-finite rows,
+    zero-norm rows, duplicates, constant features, degenerate class
+    geometry) with deterministic repair / quarantine, and quarantined
+    artifacts re-index cleanly back to the full ground set;
+  * the zero-norm ``normalize_rows`` hazard (a silent phantom 0.5
+    similarity) is detected, not silently scored;
+  * the divergence guard skips a NaN step in-scan with the step counter
+    still advancing, identically on the loop and fused paths, and a
+    rollback run restored through the PR 7 checkpointer is BIT-IDENTICAL
+    to the plain skip run (``GUARD_ROLLBACK_BIT_IDENTICAL_OK``);
+  * a healthy guarded run is bit-identical to an unguarded one (the guard
+    is pure observation until something trips);
+  * hyperband quarantines raising / non-finite trials and still finds the
+    ``best_config`` an identical sweep with those configs pre-excluded
+    finds; a corrupt rung checkpoint raises a clean error, never KeyError;
+  * the serving layer fails fast at a full queue and trips a per-key
+    circuit breaker on deterministically-failing builds while ``health()``
+    reports the degradation;
+  * selector fallback chains degrade to a declared tier with full plan
+    provenance instead of crashing.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.milo import MiloPreprocessor
+from repro.core.similarity import normalize_rows, zero_norm_rows
+from repro.data.pipeline import Pipeline
+from repro.health import (
+    CircuitBreaker,
+    CircuitOpenError,
+    DataHealthError,
+    DivergenceError,
+    FallbackExhaustedError,
+    FallbackSelector,
+    GUARD_KEY,
+    GuardPolicy,
+    SelectionDegenerateError,
+    guarded_step,
+    validate_features,
+)
+from repro.health.firewall import MAX_RECORDED_INDICES
+from repro.models.classifier import init_mlp, nesterov_update, weighted_nll
+from repro.selection import MiloSession, MiloSessionConfig, build_selector
+from repro.selection.plan import uniform_plan
+from repro.testing.faults import (
+    fail_objective_for_configs,
+    nan_at_step,
+    poison_features,
+)
+from repro.train.trainer import Trainer, TrainerConfig
+from repro.tuning.tuner import RandomSearch, hyperband
+
+
+def _dataset(n=60, d=6, c=3, seed=0):
+    rng = np.random.default_rng(seed)
+    labs = rng.integers(0, c, n).astype(np.int64)
+    feats = (rng.normal(size=(n, d)) + 0.5 * labs[:, None]).astype(np.float32)
+    return feats, labs
+
+
+# ---------------------------------------------------------------------------
+# input firewall: detection, policies, provenance
+# ---------------------------------------------------------------------------
+
+def test_firewall_raise_names_every_planted_anomaly():
+    feats, labs = _dataset()
+    bad = poison_features(feats, nan_rows=[3], inf_rows=[7], zero_rows=[11])
+    with pytest.raises(DataHealthError) as ei:
+        validate_features(bad, labs)
+    msg = str(ei.value)
+    assert "nonfinite_rows=2" in msg and "zero_norm_rows=1" in msg
+    # detection is exact, not heuristic
+    _, rep = validate_features(bad, labs, policy=None)
+    assert rep.nonfinite_rows == [3, 7]
+    assert rep.zero_norm_rows == [11]
+    assert rep.bad_rows == [3, 7, 11]
+    assert not rep.clean
+
+
+def test_firewall_clean_data_passes_untouched():
+    feats, labs = _dataset()
+    out, rep = validate_features(feats, labs)
+    assert out is feats                        # no copy on the clean path
+    assert rep.clean and rep.bad_rows == []
+
+
+def test_firewall_repair_is_deterministic_and_total():
+    feats, _ = _dataset()
+    bad = poison_features(feats, nan_rows=[2, 9], zero_rows=[5])
+    out1, rep1 = validate_features(bad, policy="repair")
+    out2, rep2 = validate_features(bad, policy="repair")
+    np.testing.assert_array_equal(out1, out2)   # bit-identical repair
+    assert rep1.repaired_rows == rep2.repaired_rows == [2, 5, 9]
+    assert np.isfinite(out1).all()
+    assert (np.linalg.norm(out1, axis=1) > 0).all()
+    # an all-NaN row repairs to the basis vector e_{i mod d}
+    e2 = np.zeros(feats.shape[1], bad.dtype)
+    e2[2 % feats.shape[1]] = 1.0
+    np.testing.assert_array_equal(out1[2], e2)
+    # untouched rows are byte-identical to the input
+    keep = np.setdiff1d(np.arange(len(bad)), [2, 5, 9])
+    np.testing.assert_array_equal(out1[keep], bad[keep])
+
+
+def test_firewall_structural_anomalies_are_report_only():
+    feats, _ = _dataset(n=40)
+    feats[10] = feats[4]                       # duplicate row
+    feats[:, 2] = 1.5                          # constant feature
+    labs = np.zeros(40, np.int64)
+    labs[-1] = 2                               # class 1 empty, class 2 singleton
+    out, rep = validate_features(feats, labs, policy="quarantine",
+                                 subset_fraction=0.9)
+    assert out is feats                        # structural issues never mutate
+    assert rep.duplicate_rows == [10]
+    assert 2 in rep.constant_features
+    assert rep.empty_classes == [1]
+    assert rep.singleton_classes == [2]
+    assert 2 in rep.overbudget_classes         # budget >= class size of 1
+    assert rep.quarantined_rows == []          # nothing actionable to act on
+
+
+def test_firewall_to_dict_truncates_examples_but_keeps_full_quarantine():
+    feats, _ = _dataset(n=120)
+    bad = poison_features(feats, nan_rows=range(50))
+    _, rep = validate_features(bad, policy="quarantine")
+    d = rep.to_dict()
+    assert d["nonfinite_rows"]["count"] == 50
+    assert len(d["nonfinite_rows"]["indices"]) == MAX_RECORDED_INDICES
+    # quarantined_rows define what the artifact IS: stored in full
+    assert d["quarantined_rows"] == list(range(50))
+    json.dumps(d)                              # JSON-safe for artifact headers
+
+
+def test_firewall_input_validation():
+    feats, labs = _dataset()
+    with pytest.raises(ValueError, match="policy"):
+        validate_features(feats, policy="explode")
+    with pytest.raises(ValueError, match="2-D"):
+        validate_features(feats.ravel())
+    with pytest.raises(ValueError, match="labels length"):
+        validate_features(feats, labs[:-1])
+    with pytest.raises(TypeError, match="floating"):
+        poison_features(labs, nan_rows=[0])
+
+
+# ---------------------------------------------------------------------------
+# satellite 1: the zero-norm normalize_rows hazard is detected, not scored
+# ---------------------------------------------------------------------------
+
+def test_zero_norm_row_regression_phantom_similarity_is_flagged():
+    """A zero-norm row passes ``normalize_rows`` silently as an exact zero
+    vector and then scores a constant phantom 0.5 against every other row
+    under the rescaled cosine.  The firewall must catch what the kernel
+    deliberately tolerates (zero rows double as padding sentinels)."""
+    feats, _ = _dataset(n=16)
+    bad = poison_features(feats, zero_rows=[6])
+    z = np.asarray(normalize_rows(jnp.asarray(bad)))
+    np.testing.assert_array_equal(z[6], np.zeros(bad.shape[1]))  # silent
+    sim_row = 0.5 * (1.0 + z @ z[6])           # the rescaled-cosine column
+    np.testing.assert_allclose(sim_row, 0.5)   # phantom mid-similarity
+    # the detection pair: the kernel-side mask and the host-side firewall
+    mask = np.asarray(zero_norm_rows(jnp.asarray(bad)))
+    assert mask[6] and mask.sum() == 1
+    with pytest.raises(DataHealthError, match="zero_norm_rows"):
+        validate_features(bad)
+
+
+# ---------------------------------------------------------------------------
+# firewall wired into preprocessing: quarantined artifacts re-index cleanly
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("gram_free", [False, True])
+def test_preprocess_quarantine_artifact_remaps_to_full_ground_set(gram_free):
+    feats, labs = _dataset(n=80)
+    bad = poison_features(feats, nan_rows=[5], zero_rows=[17, 40])
+    pre = MiloPreprocessor(subset_fraction=0.25, n_sge_subsets=2,
+                           gram_free=gram_free, firewall="quarantine")
+    md = pre.preprocess(bad, labs, jax.random.PRNGKey(0))
+    # artifact is indexed over the FULL ground set
+    assert md.wre_probs.shape[0] == 80
+    assert md.class_labels.shape[0] == 80
+    for q in (5, 17, 40):
+        assert md.wre_probs[q] == 0.0          # can never be drawn
+        assert md.wre_importance[q] == 0.0
+        assert not np.any(md.sge_subsets == q)  # never selected
+    assert np.isfinite(md.wre_probs).all()
+    # provenance records the exclusions in full
+    assert md.config["firewall"] == "quarantine"
+    assert md.config["data_health"]["quarantined_rows"] == [5, 17, 40]
+    # quarantine is deterministic: a second pass is bit-identical
+    md2 = pre.preprocess(bad, labs, jax.random.PRNGKey(0))
+    np.testing.assert_array_equal(md.sge_subsets, md2.sge_subsets)
+    np.testing.assert_array_equal(md.wre_probs, md2.wre_probs)
+
+
+def test_preprocess_firewall_raise_refuses_poisoned_ground_set():
+    feats, labs = _dataset()
+    bad = poison_features(feats, nan_rows=[0])
+    pre = MiloPreprocessor(subset_fraction=0.2, n_sge_subsets=2,
+                           firewall="raise")
+    with pytest.raises(DataHealthError):
+        pre.preprocess(bad, labs, jax.random.PRNGKey(0))
+
+
+def test_preprocess_without_firewall_leaves_config_untouched():
+    """Legacy artifact hash stability: no firewall -> no new config keys."""
+    feats, labs = _dataset()
+    md = MiloPreprocessor(subset_fraction=0.2, n_sge_subsets=2).preprocess(
+        feats, labs, jax.random.PRNGKey(0))
+    assert "firewall" not in md.config and "data_health" not in md.config
+    md2 = MiloPreprocessor(subset_fraction=0.2, n_sge_subsets=2,
+                           firewall="raise").preprocess(
+        feats, labs, jax.random.PRNGKey(0))
+    assert md2.config["firewall"] == "raise"
+    assert md2.config["data_health"]["clean"]
+    # the selection outputs themselves are identical (clean data)
+    np.testing.assert_array_equal(md.sge_subsets, md2.sge_subsets)
+
+
+def test_session_artifact_firewall_mismatch_raises(tmp_path):
+    from repro.core.metadata import MetadataMismatchError
+
+    feats, labs = _dataset(n=80)
+    path = str(tmp_path / "milo.npz")
+    base = dict(subset_fraction=0.2, n_sge_subsets=2, metadata_path=path)
+    MiloSession(MiloSessionConfig(firewall="repair", **base)).preprocess(
+        feats, labs)
+    # same artifact, different firewall expectation -> config bug, refuse
+    with pytest.raises(MetadataMismatchError, match="firewall"):
+        MiloSession(MiloSessionConfig(firewall=None, **base)).preprocess(
+            feats, labs)
+    # matching expectation reuses the artifact
+    s = MiloSession(MiloSessionConfig(firewall="repair", **base))
+    md = s.preprocess(feats, labs)
+    assert md.config["firewall"] == "repair"
+
+
+# ---------------------------------------------------------------------------
+# satellite 3: degenerate class geometry yields valid, bit-identical plans
+# ---------------------------------------------------------------------------
+
+def _degenerate_cases():
+    feats, _ = _dataset(n=40)
+    n = len(feats)
+    labs_gap = np.where(np.arange(n) % 2 == 0, 0, 2).astype(np.int64)
+    labs_single = np.zeros(n, np.int64)
+    labs_single[-1] = 1
+    feats_dup = feats.copy()
+    feats_dup[n // 2:] = feats_dup[n // 2]     # one class of clones
+    labs_half = (np.arange(n) >= n // 2).astype(np.int64)
+    labs_skew = np.zeros(n, np.int64)
+    labs_skew[-2:] = 1                         # 2-row class, budget >= size
+    return {
+        "empty_class": (feats, labs_gap, 0.3),
+        "singleton_class": (feats, labs_single, 0.3),
+        "duplicate_class": (feats_dup, labs_half, 0.3),
+        "k_ge_class_size": (feats, labs_skew, 0.95),
+    }
+
+
+@pytest.mark.parametrize("gram_free", [False, True])
+@pytest.mark.parametrize("case", sorted(_degenerate_cases()))
+def test_degenerate_geometry_valid_and_bit_identical(case, gram_free):
+    feats, labs, frac = _degenerate_cases()[case]
+    pre = MiloPreprocessor(subset_fraction=frac, n_sge_subsets=2,
+                           gram_free=gram_free)
+    md1 = pre.preprocess(feats, labs, jax.random.PRNGKey(0))
+    md2 = pre.preprocess(feats, labs, jax.random.PRNGKey(0))
+    np.testing.assert_array_equal(md1.sge_subsets, md2.sge_subsets)
+    np.testing.assert_array_equal(md1.wre_probs, md2.wre_probs)
+    assert np.isfinite(md1.wre_probs).all()
+    assert (md1.wre_probs >= 0).all()
+    n = len(feats)
+    assert ((md1.sge_subsets >= 0) & (md1.sge_subsets < n)).all()
+    # the firewall's report-only pass names the degeneracy for provenance
+    _, rep = validate_features(feats, labs, policy=None, subset_fraction=frac)
+    assert not rep.clean or case == "duplicate_class" or rep.duplicate_rows
+
+
+# ---------------------------------------------------------------------------
+# divergence guard: fused skip semantics
+# ---------------------------------------------------------------------------
+
+class _TinyState(NamedTuple):
+    p: jax.Array
+    step: jax.Array
+
+
+def _tiny_step(state, batch):
+    loss = jnp.sum(state.p * batch["x"])
+    return _TinyState(state.p - 0.1 * batch["x"], state.step + 1), {
+        "loss": loss}
+
+
+def test_guarded_step_skips_nonfinite_and_advances_counter():
+    g = jax.jit(guarded_step(nan_at_step(_tiny_step, step=1), GuardPolicy()))
+    s = _TinyState(jnp.ones(3), jnp.zeros((), jnp.int32))
+    s, m0 = g(s, {"x": jnp.ones(3)})
+    assert float(m0[GUARD_KEY]) == 0.0
+    p_before = np.asarray(s.p)
+    s, m1 = g(s, {"x": jnp.ones(3)})           # poisoned step
+    assert float(m1[GUARD_KEY]) == 1.0
+    np.testing.assert_array_equal(np.asarray(s.p), p_before)  # update skipped
+    assert int(s.step) == 2                    # counter still advanced
+    s, m2 = g(s, {"x": jnp.ones(3)})           # healthy again (no livelock)
+    assert float(m2[GUARD_KEY]) == 0.0
+    assert not np.array_equal(np.asarray(s.p), p_before)
+
+
+def test_guarded_step_max_loss_spike_counts_as_bad():
+    g = guarded_step(_tiny_step, GuardPolicy(max_loss=1.0))
+    s = _TinyState(jnp.ones(3), jnp.zeros((), jnp.int32))
+    _, m = g(s, {"x": jnp.ones(3)})            # loss = 3.0 > 1.0
+    assert float(m[GUARD_KEY]) == 1.0
+    _, m = g(s, {"x": jnp.ones(3) * 0.1})      # loss = 0.3 <= 1.0
+    assert float(m[GUARD_KEY]) == 0.0
+
+
+def test_guard_policy_validates_action():
+    with pytest.raises(ValueError, match="guard action"):
+        GuardPolicy(action="panic")
+
+
+def test_guarded_step_inside_scan_matches_step_loop():
+    g = jax.jit(guarded_step(nan_at_step(_tiny_step, step=2), GuardPolicy()))
+    xs = {"x": jnp.tile(jnp.arange(3.0) + 1, (5, 1))}
+    s0 = _TinyState(jnp.ones(3), jnp.zeros((), jnp.int32))
+    s_loop = s0
+    for t in range(5):
+        s_loop, _ = g(s_loop, {"x": xs["x"][t]})
+    s_scan, ms = jax.lax.scan(lambda st, b: g(st, b), s0, xs)
+    np.testing.assert_array_equal(np.asarray(s_scan.p), np.asarray(s_loop.p))
+    np.testing.assert_array_equal(np.asarray(ms[GUARD_KEY]),
+                                  [0.0, 0.0, 1.0, 0.0, 0.0])
+
+
+# ---------------------------------------------------------------------------
+# divergence guard on the Trainer: skip / rollback / abort
+# ---------------------------------------------------------------------------
+
+N_TR, D_TR, C_TR, K_TR, BATCH_TR = 256, 8, 4, 96, 16   # 6 steps per epoch
+
+
+class _State(NamedTuple):
+    params: dict
+    mom: dict
+    step: jax.Array
+
+
+def _cls_step(state, batch):
+    loss, g = jax.value_and_grad(weighted_nll)(
+        state.params, batch["x"], batch["y"], batch["weights"])
+    p, m = nesterov_update(state.params, state.mom, g, 0.05)
+    return _State(p, m, state.step + 1), {"loss": loss}
+
+
+def _run_guarded(action=None, *, nan_step=None, ckpt_dir=None, fused=True,
+                 epochs=3):
+    feats, labs = _dataset(n=N_TR, d=D_TR, c=C_TR, seed=0)
+    step = _cls_step if nan_step is None else nan_at_step(_cls_step,
+                                                          step=nan_step)
+    sel = build_selector("adaptive_random", n=N_TR, k=K_TR, R=1, seed=3)
+    pipe = Pipeline(None, sel, BATCH_TR, seed=1,
+                    arrays={"x": feats, "y": labs})
+    tr = Trainer(
+        jax.jit(step), pipe,
+        TrainerConfig(epochs=epochs, log_every_steps=1,
+                      checkpoint_dir=ckpt_dir,
+                      checkpoint_every_steps=5 if ckpt_dir else 0,
+                      async_checkpoint=False,
+                      guard=None if action is None else GuardPolicy(
+                          action=action)),
+        fused=fused, superstep=32)
+    params = init_mlp(jax.random.PRNGKey(0), D_TR, C_TR)
+    state = _State(params, jax.tree.map(jnp.zeros_like, params),
+                   jnp.zeros((), jnp.int32))
+    return tr.fit(state, resume=bool(ckpt_dir)), tr
+
+
+def _params_equal(a, b) -> bool:
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(jax.tree.leaves(a.params),
+                               jax.tree.leaves(b.params)))
+
+
+def test_guard_healthy_path_bit_identical_to_unguarded():
+    """On clean data the guard is pure observation: same final params."""
+    ref, tr_ref = _run_guarded(None)
+    out, tr_out = _run_guarded("skip_step")
+    assert _params_equal(ref, out)
+    assert tr_out.guard_report() is None       # nothing tripped
+    # the flag rode the existing metrics drain: every record carries it
+    recs = [h for h in tr_out.history if "loss" in h]
+    assert recs and all(h[GUARD_KEY] == 0.0 for h in recs)
+
+
+def test_guard_rollback_bit_identical_to_skip(tmp_path):
+    """The acceptance criterion: a NaN-injected run under ``rollback``
+    (checkpoint restore + re-seeded replay) ends BIT-IDENTICAL to the same
+    run under ``skip_step`` (in-scan zero-update), on both trainer paths."""
+    skip, tr_skip = _run_guarded("skip_step", nan_step=8)
+    assert int(skip.step) == 18
+    rep = tr_skip.guard_report()
+    assert rep["skipped_steps"] == 1 and rep["rollbacks"] == 0
+    assert rep["events"] == [{"action": "skip_step", "step": 9, "epoch": 1}]
+
+    rb, tr_rb = _run_guarded("rollback", nan_step=8,
+                             ckpt_dir=str(tmp_path / "ckpt"))
+    assert int(rb.step) == 18
+    rep = tr_rb.guard_report()
+    assert rep["rollbacks"] == 1 and rep["skipped_steps"] == 1
+    restores = [h for h in tr_rb.history if h.get("guard") == "rollback"]
+    assert len(restores) == 1 and restores[0]["restored_step"] == 5
+    assert _params_equal(skip, rb)
+
+    loop, tr_loop = _run_guarded("skip_step", nan_step=8, fused=False)
+    assert _params_equal(skip, loop)
+    assert tr_loop.guard_report()["skipped_steps"] == 1
+    print("GUARD_ROLLBACK_BIT_IDENTICAL_OK")
+
+
+def test_guard_abort_raises_divergence_error():
+    with pytest.raises(DivergenceError):
+        _run_guarded("abort", nan_step=8)
+
+
+def test_guard_rollback_without_checkpoint_raises():
+    with pytest.raises(DivergenceError, match="checkpoint"):
+        _run_guarded("rollback", nan_step=8)   # no checkpoint_dir configured
+
+
+def test_guard_rollback_budget_exhaustion_raises(tmp_path):
+    feats, labs = _dataset(n=N_TR, d=D_TR, c=C_TR, seed=0)
+    sel = build_selector("adaptive_random", n=N_TR, k=K_TR, R=1, seed=3)
+    pipe = Pipeline(None, sel, BATCH_TR, seed=1,
+                    arrays={"x": feats, "y": labs})
+    tr = Trainer(
+        jax.jit(nan_at_step(_cls_step, step=8)), pipe,
+        TrainerConfig(epochs=3, checkpoint_dir=str(tmp_path),
+                      checkpoint_every_steps=5, async_checkpoint=False,
+                      guard=GuardPolicy(action="rollback", max_rollbacks=0)),
+        fused=True, superstep=32)
+    params = init_mlp(jax.random.PRNGKey(0), D_TR, C_TR)
+    state = _State(params, jax.tree.map(jnp.zeros_like, params),
+                   jnp.zeros((), jnp.int32))
+    with pytest.raises(DivergenceError, match="rollback"):
+        tr.fit(state, resume=True)
+
+
+# ---------------------------------------------------------------------------
+# hyperband trial quarantine (+ satellite 6: corrupt rung checkpoints)
+# ---------------------------------------------------------------------------
+
+HB_SPACE = {"lr": ("log", 1e-4, 1e-1), "hidden": ("choice", [16, 32, 64])}
+
+
+def _hb_obj(cfg, budget):
+    return -abs(cfg["lr"] - 0.01) * 100 + budget * 0.001 + cfg["hidden"] * 1e-5
+
+
+def test_hyperband_quarantines_failing_trials_identically():
+    """Three scripted always-failing configs must not change ``best_config``
+    relative to a sweep where those configs are pre-excluded (scored with a
+    finite floor).  RandomSearch's config stream ignores history, so the
+    two sweeps see the identical trial sequence."""
+    ref = hyperband(_hb_obj, RandomSearch(HB_SPACE, seed=7), max_budget=9,
+                    eta=3)
+    fail_cfgs = [dict(t["config"]) for t in ref.trials[:3]]
+
+    def pre_excluded(cfg, budget):
+        if any(cfg == c for c in fail_cfgs):
+            return -1e9                        # finite floor: never promoted
+        return _hb_obj(cfg, budget)
+
+    excluded = hyperband(pre_excluded, RandomSearch(HB_SPACE, seed=7),
+                         max_budget=9, eta=3)
+    failing = fail_objective_for_configs(_hb_obj, fail_configs=fail_cfgs)
+    quar = hyperband(failing, RandomSearch(HB_SPACE, seed=7), max_budget=9,
+                     eta=3)
+    assert quar.best_config == excluded.best_config
+    assert quar.failed_trials == failing.failures_injected == 3
+    failed = [t for t in quar.trials if t.get("failed")]
+    assert len(failed) == 3
+    assert all(t["score"] == -np.inf and "injected" in t["error"]
+               for t in failed)
+    # healthy trials carry no failure keys (checkpoint schema unchanged)
+    assert all("failed" not in t
+               for t in quar.trials if not t.get("failed"))
+
+
+def test_hyperband_nonfinite_score_is_quarantined():
+    calls = [0]
+
+    def sometimes_nan(cfg, budget):
+        calls[0] += 1
+        return float("nan") if calls[0] == 2 else _hb_obj(cfg, budget)
+
+    res = hyperband(sometimes_nan, RandomSearch(HB_SPACE, seed=3),
+                    max_budget=9, eta=3)
+    assert res.failed_trials == 1
+    bad = [t for t in res.trials if t.get("failed")]
+    assert len(bad) == 1 and "non-finite" in bad[0]["error"]
+    assert np.isfinite(res.best_score)
+
+
+def test_hyperband_all_trials_failed_raises():
+    def always(cfg, budget):
+        raise RuntimeError("diverged")
+
+    with pytest.raises(RuntimeError, match="all .* failed"):
+        hyperband(always, RandomSearch(HB_SPACE, seed=1), max_budget=3, eta=3)
+
+
+def test_hyperband_failed_trials_survive_checkpoint_roundtrip(tmp_path):
+    ck = str(tmp_path / "hb.json")
+    fail_cfgs_holder = []
+
+    ref = hyperband(_hb_obj, RandomSearch(HB_SPACE, seed=7), max_budget=9,
+                    eta=3)
+    fail_cfgs_holder = [dict(t["config"]) for t in ref.trials[:2]]
+    failing = fail_objective_for_configs(_hb_obj,
+                                         fail_configs=fail_cfgs_holder)
+    run1 = hyperband(failing, RandomSearch(HB_SPACE, seed=7), max_budget=9,
+                     eta=3, checkpoint=ck)
+    assert run1.failed_trials == 2
+    # a finished checkpoint round-trips -inf scores and failure records
+    run2 = hyperband(_hb_obj, RandomSearch(HB_SPACE, seed=7), max_budget=9,
+                     eta=3, checkpoint=ck)
+    assert run2.failed_trials == 2
+    assert run2.best_config == run1.best_config
+    assert [t for t in run2.trials if t.get("failed")] == \
+        [t for t in run1.trials if t.get("failed")]
+
+
+@pytest.mark.parametrize("damage", ["truncate", "missing_key", "wrong_type"])
+def test_hyperband_corrupt_checkpoint_raises_clean_error(tmp_path, damage):
+    """Satellite 6: a torn / partially-written rung checkpoint must raise a
+    clean 'corrupt hyperband checkpoint' error, never a KeyError from deep
+    inside the resume bookkeeping."""
+    ck = str(tmp_path / "hb.json")
+    hyperband(_hb_obj, RandomSearch(HB_SPACE, seed=2), max_budget=3, eta=3,
+              checkpoint=ck)
+    if damage == "truncate":
+        size = os.path.getsize(ck)
+        with open(ck, "r+b") as f:
+            f.truncate(size // 2)
+    elif damage == "missing_key":
+        state = json.load(open(ck))
+        del state["trials"]                    # valid JSON, torn schema
+        json.dump(state, open(ck, "w"))
+    else:
+        json.dump([1, 2, 3], open(ck, "w"))    # valid JSON, wrong shape
+    with pytest.raises(ValueError, match="corrupt hyperband checkpoint"):
+        hyperband(_hb_obj, RandomSearch(HB_SPACE, seed=2), max_budget=3,
+                  eta=3, checkpoint=ck)
+
+
+# ---------------------------------------------------------------------------
+# circuit breaker
+# ---------------------------------------------------------------------------
+
+class _Clock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_breaker_closed_open_halfopen_cycle():
+    clk = _Clock()
+    br = CircuitBreaker(threshold=2, cooldown=10.0, clock=clk)
+    br.check("k")                              # closed: no-op
+    br.record_failure("k")
+    br.check("k")                              # 1 failure < threshold
+    br.record_failure("k")
+    assert br.state("k") == "open"
+    with pytest.raises(CircuitOpenError, match="fast-failing"):
+        br.check("k")
+    clk.t = 10.0                               # cooldown elapsed
+    assert br.state("k") == "half_open"
+    br.check("k")                              # first caller becomes probe
+    with pytest.raises(CircuitOpenError, match="probe"):
+        br.check("k")                          # concurrent callers fast-fail
+    br.record_failure("k")                     # probe failed: re-open
+    assert br.state("k") == "open"
+    clk.t = 20.0
+    br.check("k")
+    br.record_success("k")                     # probe succeeded: closed
+    assert br.state("k") == "closed"
+    br.check("k")
+    assert br.snapshot() == {}                 # success clears the key
+
+
+def test_breaker_success_resets_consecutive_count():
+    br = CircuitBreaker(threshold=3, cooldown=1.0)
+    for _ in range(2):
+        br.record_failure("k")
+    br.record_success("k")                     # streak broken
+    for _ in range(2):
+        br.record_failure("k")
+    assert br.state("k") == "closed"           # never reached 3 consecutive
+    snap = br.snapshot()
+    assert snap["k"] == {"state": "closed", "failures": 2}
+
+
+# ---------------------------------------------------------------------------
+# server hardening: bounded queue, breaker-gated builds, health()
+# ---------------------------------------------------------------------------
+
+def _serve_config(**kw):
+    base = dict(subset_fraction=0.2, n_sge_subsets=2, gram_free=True,
+                total_epochs=4, sub_steps=2)
+    base.update(kw)
+    return MiloSessionConfig(**base)
+
+
+def test_server_overload_fast_fails_at_submit(monkeypatch):
+    import threading
+
+    from repro.serve import MiloServer, ServerOverloadedError
+
+    feats, labs = _dataset(n=80)
+    entered, release = threading.Event(), threading.Event()
+
+    def blocking_build(self, *a, **kw):
+        entered.set()
+        release.wait(60)
+        raise RuntimeError("never built")
+
+    monkeypatch.setattr(MiloSession, "build_metadata", blocking_build)
+    try:
+        with MiloServer(_serve_config(), num_workers=1, max_queue=2) as srv:
+            r1 = srv.submit("preprocess", features=feats, labels=labs)
+            assert entered.wait(30)            # worker is stuck in the build
+            srv.submit("preprocess", features=feats, labels=labs)
+            srv.submit("preprocess", features=feats, labels=labs)
+            with pytest.raises(ServerOverloadedError, match="queue full"):
+                srv.submit("preprocess", features=feats, labels=labs)
+            h = srv.health()
+            assert h["status"] == "degraded"
+            assert h["queue"] == {"depth": 2, "limit": 2}
+            release.set()
+            with pytest.raises(RuntimeError, match="never built"):
+                srv.result(r1, timeout=60)
+    finally:
+        release.set()
+
+    with pytest.raises(ValueError, match="max_queue"):
+        MiloServer(_serve_config(), max_queue=0)
+
+
+def test_server_breaker_trips_on_deterministic_build_failure(monkeypatch):
+    from repro.serve import MiloServer
+
+    feats, labs = _dataset(n=80)
+    calls = [0]
+
+    def always_broken(self, *a, **kw):
+        calls[0] += 1
+        raise ValueError("poisoned ground set")
+
+    monkeypatch.setattr(MiloSession, "build_metadata", always_broken)
+    br = CircuitBreaker(threshold=2, cooldown=1e9)
+    with MiloServer(_serve_config(), num_workers=1, breaker=br) as srv:
+        for _ in range(2):
+            rid = srv.submit("preprocess", features=feats, labels=labs)
+            with pytest.raises(ValueError, match="poisoned"):
+                srv.result(rid, timeout=60)
+        # circuit open: the third request fast-fails WITHOUT building
+        rid = srv.submit("preprocess", features=feats, labels=labs)
+        with pytest.raises(CircuitOpenError):
+            srv.result(rid, timeout=60)
+        assert calls[0] == 2                   # the build never ran again
+        h = srv.health()
+        assert h["status"] == "degraded" and len(h["tripped_keys"]) == 1
+        # 2 real build failures + 1 breaker fast-fail (also a failed
+        # resolution from the store's point of view)
+        assert h["store"]["build_failures"] == 3
+        from repro.serve import artifact_request_config
+
+        key = srv.store.key_for(srv.data_fingerprint(feats),
+                                artifact_request_config(srv.config))
+        assert srv.store.failures_for(key) >= 2   # per-key failure streak
+        assert srv.store.failures_for(("no", "such")) == 0
+
+
+def test_server_health_ok_and_recovers(tmp_path):
+    from repro.serve import MiloServer
+
+    feats, labs = _dataset(n=80)
+    with MiloServer(_serve_config(), store_root=str(tmp_path / "store"),
+                    num_workers=1) as srv:
+        h = srv.health()
+        assert h["status"] == "ok" and h["breakers"] == {}
+        rid = srv.submit("preprocess", features=feats, labels=labs)
+        out = srv.result(rid, timeout=120)
+        assert out["source"] == "built"
+        h = srv.health()
+        assert h["status"] == "ok" and h["failures"] == 0
+        assert h["queue"]["depth"] == 0
+        json.dumps(h)                          # endpoint-ready
+    assert srv.health()["status"] == "stopped"
+
+
+# ---------------------------------------------------------------------------
+# degraded-mode selection: fallback chains
+# ---------------------------------------------------------------------------
+
+class _StubSelector:
+    def __init__(self, weights=None, exc=None):
+        self.weights = weights
+        self.exc = exc
+        self.resets = 0
+
+    def plan(self, epoch):
+        if self.exc is not None:
+            raise self.exc
+        return dataclasses.replace(
+            uniform_plan(np.arange(4), "adaptive", epoch),
+            weights=np.asarray(self.weights, np.float64))
+
+    def reset_cache(self):
+        self.resets += 1
+
+
+def test_fallback_selector_degrades_with_provenance():
+    good = _StubSelector(weights=[1.0, 1.0, 1.0, 1.0])
+    fb = FallbackSelector([
+        ("milo", lambda: _StubSelector(exc=SelectionDegenerateError("empty"))),
+        ("adaptive_random", lambda: good),
+    ])
+    plan = fb.plan(0)
+    assert fb.active_name == "adaptive_random"
+    assert plan.provenance["fallback_from"] == "milo"
+    assert plan.provenance["fallback_selector"] == "adaptive_random"
+    assert len(fb.events) == 1 and fb.events[0]["stage"] == "plan"
+    # the chain never goes back: the next plan skips the degenerate tier
+    fb.plan(1)
+    assert len(fb.events) == 1
+    fb.reset_cache()
+    assert good.resets == 1
+
+
+def test_fallback_selector_catches_build_failures_and_nonfinite_weights():
+    def broken_factory():
+        raise ValueError("cannot build")
+
+    fb = FallbackSelector([
+        ("milo", broken_factory),
+        ("el2n", lambda: _StubSelector(weights=[1.0, np.nan, 1.0, 1.0])),
+        ("adaptive_random",
+         lambda: _StubSelector(weights=[1.0, 1.0, 1.0, 1.0])),
+    ])
+    plan = fb.plan(0)
+    assert np.isfinite(plan.weights).all()
+    stages = [(e["selector"], e["stage"]) for e in fb.events]
+    assert stages == [("milo", "build"), ("el2n", "plan")]
+
+
+def test_fallback_selector_exhaustion_and_mismatch_passthrough():
+    from repro.core.metadata import MetadataMismatchError
+
+    with pytest.raises(ValueError, match="at least one"):
+        FallbackSelector([])
+    fb = FallbackSelector(
+        [("a", lambda: _StubSelector(exc=ValueError("x")))])
+    with pytest.raises(FallbackExhaustedError, match="a\\(plan\\)"):
+        fb.plan(0)
+    # config bugs are never degraded around
+    fb2 = FallbackSelector([
+        ("a", lambda: _StubSelector(exc=MetadataMismatchError("wrong"))),
+        ("b", lambda: _StubSelector(weights=[1.0] * 4)),
+    ])
+    with pytest.raises(MetadataMismatchError):
+        fb2.plan(0)
+
+
+def test_session_selector_fallback_chain():
+    """A session with a declared fallback chain degrades a failing primary
+    (milo_fixed without features is a build-time ValueError) to
+    adaptive_random, with the hop recorded in plan provenance."""
+    cfg = MiloSessionConfig(selector="milo_fixed", subset_fraction=0.25,
+                            selector_fallback=("adaptive_random",))
+    sel = MiloSession(cfg).selector(n=64)
+    plan = sel.plan(0)
+    plan.validate(64)
+    assert sel.active_name == "adaptive_random"
+    assert plan.provenance["fallback_from"] == "milo_fixed"
+    assert plan.provenance["fallback_events"][0]["stage"] == "build"
+    # without the chain the same config raises
+    bare = MiloSessionConfig(selector="milo_fixed", subset_fraction=0.25)
+    with pytest.raises(ValueError, match="features"):
+        MiloSession(bare).selector(n=64)
