@@ -18,6 +18,7 @@ module names as argv to run a subset, e.g.
   bench_preprocess     — App. H.3 (preprocess cost, greedy/SGE throughput)
   bench_kernels        — kernel microbenches
   bench_serving        — warm MiloServer vs N cold sessions (concurrent tuning)
+  bench_hierarchical   — partition→refine selection at flat-infeasible n
 """
 from __future__ import annotations
 
@@ -100,6 +101,7 @@ def main(argv: list[str] | None = None) -> None:
     from benchmarks import (
         bench_ablations,
         bench_exploration,
+        bench_hierarchical,
         bench_kernels,
         bench_preprocess,
         bench_serving,
@@ -120,6 +122,7 @@ def main(argv: list[str] | None = None) -> None:
         ("ablations", bench_ablations, "selection"),
         ("preprocess", bench_preprocess, "selection"),
         ("kernels", bench_kernels, "selection"),
+        ("hierarchical", bench_hierarchical, "selection"),
     ]
     if argv:
         known = {name for name, _, _ in modules}

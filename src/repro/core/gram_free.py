@@ -242,6 +242,70 @@ def make_gram_free_disparity_min() -> SetFunction:
                        gains_at=gains_at)
 
 
+# ---------------------------------------------------------------------------
+# Query-conditioned facility location (targeted / SMI-style selection)
+# ---------------------------------------------------------------------------
+
+# manual memo (lru_cache can't key on arrays): (shape, dtype, bytes) -> fn.
+# Bounded: targeted sessions reuse a handful of query banks, not thousands.
+_QUERY_FL_CACHE: dict = {}
+_QUERY_FL_CACHE_MAX = 16
+
+
+def make_query_facility_location(z_query) -> SetFunction:
+    """Facility location over a *query* set instead of the ground set.
+
+    SMI-style targeted selection: f(S) = Σ_q max_{a in S} sim(a, q), so the
+    per-element gain is Σ_q relu(sim(a, q) − cover_q) — the state is the
+    per-query cover (q,), not the per-ground-row cover (n,).  ``z_query``
+    must be row-normalized (same contract as the ground features); it is
+    closed over as a jit constant, which is fine at the intended scale
+    (queries are a handful of exemplars, the ground set is the big side).
+
+    Padding ground rows (all-zero) get similarity exactly 0.5 to every
+    query, which could look like positive gain at init — so gains are
+    computed against a cover initialized at 0.5, making padding rows' gains
+    exactly 0 (and the greedy engines' ``valid`` mask excludes them anyway).
+    """
+    import numpy as np
+
+    zq = np.ascontiguousarray(np.asarray(z_query, np.float32))
+    key = (zq.shape, zq.tobytes())
+    hit = _QUERY_FL_CACHE.get(key)
+    if hit is not None:
+        return hit
+
+    zq_j = jnp.asarray(zq)
+
+    def init(z: jax.Array) -> State:
+        # cover starts at 0.5 == sim(zero-row, q): padding contributes 0 gain
+        return jnp.full((zq_j.shape[0],), 0.5, jnp.float32)
+
+    def _sim_q(z: jax.Array) -> jax.Array:
+        return 0.5 + 0.5 * (z @ zq_j.T)  # (n, q)
+
+    def gains(c: State, z: jax.Array) -> jax.Array:
+        return jnp.sum(jnp.maximum(_sim_q(z) - c[None, :], 0.0), axis=1)
+
+    def gains_at(c: State, z: jax.Array, cand: jax.Array) -> jax.Array:
+        return gains(c, z[cand])
+
+    def update(c: State, z: jax.Array, j: jax.Array) -> State:
+        return jnp.maximum(c, 0.5 + 0.5 * (zq_j @ z[j]))
+
+    def evaluate(mask: jax.Array, z: jax.Array) -> jax.Array:
+        sim = jnp.where(mask[:, None], _sim_q(z), -jnp.inf)  # (n, q)
+        best = jnp.max(sim, axis=0)
+        return jnp.sum(jnp.where(jnp.any(mask), best, 0.0))
+
+    fn = SetFunction("query_facility_location", init, gains, update, evaluate,
+                     gains_at=gains_at)
+    if len(_QUERY_FL_CACHE) >= _QUERY_FL_CACHE_MAX:
+        _QUERY_FL_CACHE.pop(next(iter(_QUERY_FL_CACHE)))
+    _QUERY_FL_CACHE[key] = fn
+    return fn
+
+
 def get_gram_free(name: str, **kwargs) -> SetFunction:
     """Gram-free counterpart of ``submodular.get`` (cosine metric only)."""
     factories = {

@@ -501,3 +501,33 @@ def greedy_importance(
     g = jnp.full((n_,), _NEG, jnp.float32)
     g = g.at[res.indices].max(res.gains)
     return jnp.where(g <= _NEG / 2, 0.0, g)
+
+
+def refine(
+    fn: SetFunction,
+    K: jax.Array,
+    k: int,
+    *,
+    valid: jax.Array | None = None,
+    n: int | None = None,
+    lazy_budget: int | None = None,
+    two_level: bool = False,
+    verify_argmax: bool = False,
+) -> GreedyResult:
+    """Level-1 refine: exact greedy over a union of level-0 winners.
+
+    The entry point the hierarchical (partition-then-refine) pipeline calls
+    after merging per-partition selections: ``K`` holds only the union rows
+    (typically ``refine_factor * k`` of them), so an exact pass is cheap even
+    when the original ground set was not.  Routes through ``lazy_greedy``
+    when a budget is given and the set function has lazy hooks — the same
+    dispatch rule ``greedy_importance`` uses — and degrades to plain
+    ``greedy`` otherwise, so disparity/graph-cut refines work too.
+    """
+    n_ = K.shape[0] if n is None else n
+    if (lazy_budget is not None and fn.lazy is not None
+            and 1 <= lazy_budget < n_):
+        res = lazy_greedy(fn, K, k, budget=lazy_budget, valid=valid, n=n_,
+                          two_level=two_level, verify_argmax=verify_argmax)
+        return GreedyResult(res.indices, res.gains)
+    return greedy(fn, K, k, valid=valid, n=n_)

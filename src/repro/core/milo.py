@@ -27,7 +27,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.greedy import (
+    greedy,
     greedy_importance,
+    refine as run_refine,
     sge as run_sge,
     stochastic_candidate_count,
 )
@@ -35,7 +37,14 @@ from repro.core import gram_free as gram_free_mod, submodular
 from repro.core.curriculum import CurriculumConfig
 from repro.core.exploration import taylor_softmax, weighted_sample_without_replacement
 from repro.core.metadata import MiloMetadata
-from repro.core.partition import Partition, merge_class_selections, partition_by_class, proportional_budgets
+from repro.core.partition import (
+    Partition,
+    PartitionStrategy,
+    make_partition_strategy,
+    merge_class_selections,
+    partition_by_class,
+    proportional_budgets,
+)
 from repro.core.similarity import gram_matrix_blocked, normalize_rows
 
 
@@ -112,6 +121,29 @@ class MiloPreprocessor:
     # deterministically, "quarantine" excludes them from the ground set
     # and records the indices in provenance.  See repro.health.firewall.
     firewall: str | None = None
+    # Level-0 ground-set decomposition (core.partition): "by_class" is the
+    # paper's split and the provably-neutral default; "random_blocks" /
+    # "balanced_blocks" bound per-partition memory so ground sets far past
+    # one engine invocation's capacity still preprocess.
+    partition: str = "by_class"
+    partition_block: int = 4096     # block size for the block strategies
+    partition_seed: int = 0         # random_blocks permutation seed
+    # Level-1 refine: each partition contributes min(n_c, refine_factor*k_c)
+    # SGE winners per bank slot and a greedy refine over the slot's union
+    # (the easy_fn objective, lazy-routed like the WRE pass) cuts it back to
+    # exactly k — the two-level scheme of Mirzasoleiman et al.  1 disables
+    # the refine entirely: the flat path, bit-identical to pre-hierarchy
+    # builds.
+    refine_factor: int = 1
+
+    def partition_strategy(self) -> PartitionStrategy:
+        """The level-0 decomposition this preprocessor applies (see
+        ``core.partition``); serving replays it to warm the exact per-
+        partition geometries a future request will compile."""
+        return make_partition_strategy(
+            self.partition, block_size=self.partition_block,
+            seed=self.partition_seed,
+        )
 
     def _sharded_set_fn(self, name: str, mesh) -> submodular.SetFunction:
         from repro.core import sharded as sharded_mod
@@ -252,6 +284,67 @@ class MiloPreprocessor:
         imp = np.asarray(imp_full, np.float32)[:n_c]
         return subs_c, imp
 
+    def _refine_indices(
+        self, feats_u: np.ndarray, k: int, mesh, easy, easy_sh
+    ) -> np.ndarray:
+        """Level-1 pass: exact greedy (easy_fn objective) over the union of
+        level-0 winners, lazy-routed and mesh-dispatched exactly like the
+        per-partition engines.  Returns local indices into ``feats_u``."""
+        from repro.core import sharded as sharded_mod
+
+        n_u = feats_u.shape[0]
+        z = jnp.asarray(feats_u)
+        if self.gram_free:
+            A = normalize_rows(z.astype(jnp.float32))
+        else:
+            A = gram_matrix_blocked(
+                z, metric=self.metric, block=self.gram_block,
+                use_pallas=self.use_pallas,
+            )
+        shard_ok = mesh is not None and n_u % mesh.size == 0
+        if shard_ok:
+            res = sharded_mod.sharded_refine(
+                easy_sh, A, k, mesh=mesh,
+                lazy_budget=self._lazy_budget(n_u, easy_sh),
+                lazy_two_level=self.lazy_two_level,
+            )
+        else:
+            res = run_refine(
+                easy, A, k, lazy_budget=self._lazy_budget(n_u, easy),
+                two_level=self.lazy_two_level,
+            )
+        return np.asarray(res.indices, np.int64)
+
+    def _refine_bank(
+        self,
+        features: np.ndarray,
+        parts: Sequence[Partition],
+        per_class_sge: Sequence[np.ndarray],
+        k: int,
+        mesh,
+        easy,
+        easy_sh,
+    ) -> np.ndarray:
+        """Cut each oversampled bank slot back down to exactly k.
+
+        Every slot's union has the same size (Σ min(n_c, rf·k_c) — the
+        per-partition bank widths are slot-independent), so the refine
+        program compiles once and replays across the bank.
+        """
+        slots = []
+        for i in range(self.n_sge_subsets):
+            union = merge_class_selections(
+                parts, [s[i] for s in per_class_sge]
+            )
+            if len(union) <= k:
+                slots.append(union)
+                continue
+            local = self._refine_indices(
+                features[union], k, mesh, easy, easy_sh
+            )
+            slots.append(union[local])
+        return np.stack(slots, axis=0)
+
     def _selection_mesh(self):
         """(mesh, easy_sh, hard_sh) when shard_selection routes to a real
         multi-device mesh; (None, None, None) otherwise."""
@@ -304,20 +397,32 @@ class MiloPreprocessor:
         hard = self._set_fn(self.hard_fn)
         mesh, easy_sh, hard_sh = self._selection_mesh()
         rng = np.random.default_rng(0)
+        rf = max(1, int(self.refine_factor))
         seen: set[tuple[int, int]] = set()
         for n_c, k_c in bucket_list:
-            if k_c <= 0 or (n_c, k_c) in seen:
+            # the per-partition engines run at the oversampled bank width
+            k_sel = min(n_c, rf * k_c)
+            if k_sel <= 0 or (n_c, k_sel) in seen:
                 continue
-            seen.add((n_c, k_c))
+            seen.add((n_c, k_sel))
             key, k_sge = jax.random.split(key)
             dummy = rng.normal(size=(n_c, d)).astype(np.float32)
             _, imp = self._class_selection(
-                dummy, k_c, k_sge, bucket=bucket, mesh=mesh,
+                dummy, k_sel, k_sge, bucket=bucket, mesh=mesh,
                 easy=easy, hard=hard, easy_sh=easy_sh, hard_sh=hard_sh,
             )
             # preprocess follows every class selection with a within-class
             # Taylor-softmax on the (n_c,)-shaped importance — warm it too
             jax.block_until_ready(taylor_softmax(jnp.asarray(imp)))
+        if rf > 1:
+            # warm the level-1 refine program on the exact union geometry
+            # preprocess will hit: Σ min(n_c, rf·k_c) winner rows cut to k
+            n_union = sum(min(n_c, rf * k_c)
+                          for n_c, k_c in bucket_list if k_c > 0)
+            k_total = sum(k_c for n_c, k_c in bucket_list if k_c > 0)
+            if 0 < k_total < n_union:
+                dummy = rng.normal(size=(n_union, d)).astype(np.float32)
+                self._refine_indices(dummy, k_total, mesh, easy, easy_sh)
         return len(seen)
 
     def preprocess(
@@ -350,6 +455,10 @@ class MiloPreprocessor:
             features, report = validate_features(
                 features, labels, policy=self.firewall,
                 subset_fraction=self.subset_fraction,
+                # overbudget detection mirrors the decomposition selection
+                # will actually use (classwise off -> single catch-all)
+                strategy=(self.partition_strategy() if self.classwise
+                          else None),
             )
         quarantined = report.quarantined_rows if report is not None else []
         if quarantined:
@@ -419,13 +528,20 @@ class MiloPreprocessor:
             )
         m = features.shape[0]
         k = max(1, int(round(self.subset_fraction * m)))
-        if labels is None or not self.classwise:
-            labels_arr = np.zeros((m,), np.int64) if labels is None else np.asarray(labels, np.int64)
-            parts = [Partition(0, np.arange(m, dtype=np.int64))]
-        else:
-            labels_arr = np.asarray(labels, np.int64)
-            parts = partition_by_class(labels_arr)
+        strategy = self.partition_strategy()
+        labels_arr = (np.zeros((m,), np.int64) if labels is None
+                      else np.asarray(labels, np.int64))
+        # label-free strategies (random_blocks) ignore the labels argument;
+        # by_class without labels / classwise yields the single catch-all
+        # partition — exactly the historical flat behaviour
+        parts = strategy.partition(
+            None if labels is None or not self.classwise else labels_arr, m
+        )
         budgets = proportional_budgets(parts, k)
+        rf = max(1, int(self.refine_factor))
+        # oversampled per-partition bank widths (== budgets when rf == 1)
+        sel_widths = [min(len(p.indices), rf * b)
+                      for p, b in zip(parts, budgets)]
 
         easy = self._set_fn(self.easy_fn)
         hard = self._set_fn(self.hard_fn)
@@ -439,15 +555,15 @@ class MiloPreprocessor:
         wre_probs = np.zeros((m,), np.float32)
         wre_importance = np.zeros((m,), np.float32)
 
-        for part, k_c in zip(parts, budgets):
+        for part, k_sel in zip(parts, sel_widths):
             key, k_sge = jax.random.split(key)
             n_c = len(part.indices)
-            if k_c <= 0:
+            if k_sel <= 0:
                 per_class_sge.append(np.zeros((self.n_sge_subsets, 0), np.int64))
                 imp = np.zeros((n_c,), np.float32)
             else:
                 subs_c, imp = self._class_selection(
-                    features[part.indices], k_c, k_sge, bucket=bucket,
+                    features[part.indices], k_sel, k_sge, bucket=bucket,
                     mesh=mesh, easy=easy, hard=hard,
                     easy_sh=easy_sh, hard_sh=hard_sh,
                 )
@@ -459,45 +575,60 @@ class MiloPreprocessor:
             wre_probs[part.indices] = p_local * (n_c / m)
 
         wre_probs = _normalize_probs(wre_probs)
-        sge_subsets = np.stack(
-            [
-                merge_class_selections(parts, [s[i] for s in per_class_sge])
-                for i in range(self.n_sge_subsets)
-            ],
-            axis=0,
+        if rf > 1:
+            # level-1: each slot's oversampled union refined down to k
+            sge_subsets = self._refine_bank(
+                features, parts, per_class_sge, k, mesh, easy, easy_sh
+            )
+        else:
+            sge_subsets = np.stack(
+                [
+                    merge_class_selections(parts, [s[i] for s in per_class_sge])
+                    for i in range(self.n_sge_subsets)
+                ],
+                axis=0,
+            )
+        config = dict(
+            subset_fraction=self.subset_fraction,
+            k=int(sge_subsets.shape[1]),
+            n_sge_subsets=self.n_sge_subsets,
+            eps=self.eps,
+            easy_fn=self.easy_fn,
+            hard_fn=self.hard_fn,
+            graph_cut_lambda=self.graph_cut_lambda,
+            classwise=self.classwise,
+            metric=self.metric,
+            gram_free=self.gram_free,
+            bucket_classes=self.bucket_classes,
+            # trajectory-affecting engine knobs (checked on artifact
+            # reuse); shard_selection is recorded for provenance only —
+            # sharded and single-device runs select identically
+            lazy_gains=self.lazy_gains,
+            lazy_threshold=self.lazy_threshold,
+            # provenance only, like shard_selection: two-level gathers
+            # are bit-identical to single-level, so artifacts stay
+            # portable across the knob
+            lazy_two_level=self.lazy_two_level,
+            exact_sge_candidates=self.exact_sge_candidates,
+            shard_selection=self.shard_selection,
+            encoder_id=encoder_id,
+            prep_seed=prep_seed,
         )
+        # Partition provenance is stamped only when the hierarchical path is
+        # active: flat (by_class, rf == 1) configs stay key-for-key identical
+        # to pre-hierarchy builds, so their config_hash — and every artifact
+        # reuse check keyed on it — is unchanged (the firewall keys set the
+        # same precedent).
+        if strategy.name != "by_class" or rf > 1:
+            config.update(strategy.config())
+            config["refine_factor"] = rf
         return MiloMetadata(
             sge_subsets=sge_subsets,
             wre_probs=wre_probs,
             wre_importance=wre_importance,
             class_labels=labels_arr,
             class_budgets=np.asarray(budgets, np.int64),
-            config=dict(
-                subset_fraction=self.subset_fraction,
-                k=int(sge_subsets.shape[1]),
-                n_sge_subsets=self.n_sge_subsets,
-                eps=self.eps,
-                easy_fn=self.easy_fn,
-                hard_fn=self.hard_fn,
-                graph_cut_lambda=self.graph_cut_lambda,
-                classwise=self.classwise,
-                metric=self.metric,
-                gram_free=self.gram_free,
-                bucket_classes=self.bucket_classes,
-                # trajectory-affecting engine knobs (checked on artifact
-                # reuse); shard_selection is recorded for provenance only —
-                # sharded and single-device runs select identically
-                lazy_gains=self.lazy_gains,
-                lazy_threshold=self.lazy_threshold,
-                # provenance only, like shard_selection: two-level gathers
-                # are bit-identical to single-level, so artifacts stay
-                # portable across the knob
-                lazy_two_level=self.lazy_two_level,
-                exact_sge_candidates=self.exact_sge_candidates,
-                shard_selection=self.shard_selection,
-                encoder_id=encoder_id,
-                prep_seed=prep_seed,
-            ),
+            config=config,
         )
 
 
@@ -541,6 +672,213 @@ class MiloSelector:
             )
         self._cache_epoch, self._cache = epoch, idx
         return idx
+
+
+def _hier_kernel(
+    feats: np.ndarray,
+    n_pad: int,
+    *,
+    gram_free: bool,
+    metric: str,
+    gram_block: int,
+    use_pallas: bool,
+    pre_normalized: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """(engine kernel, valid mask) for one partition, padded to ``n_pad``.
+
+    Padding keeps every partition on ONE compiled greedy program (shapes
+    (n_pad, ·) regardless of the true slice size); masking is exact, so the
+    first n-valid picks equal the unpadded run's.  The mask is always
+    materialized — an all-true mask is bit-equivalent to ``valid=None`` and
+    keeps the jit input pytree static across equal- and under-sized
+    partitions.
+    """
+    z = jnp.asarray(feats, jnp.float32)
+    n = z.shape[0]
+    if gram_free:
+        A = z if pre_normalized else normalize_rows(z)
+        if n_pad > n:
+            A = jnp.pad(A, ((0, n_pad - n), (0, 0)))
+    else:
+        A = gram_matrix_blocked(z, metric=metric, block=gram_block,
+                                use_pallas=use_pallas)
+        if n_pad > n:
+            A = jnp.pad(A, ((0, n_pad - n), (0, n_pad - n)))
+    return A, jnp.arange(n_pad) < n
+
+
+def _two_level_select(
+    features: np.ndarray,
+    k: int,
+    parts: Sequence[Partition],
+    budgets: Sequence[int],
+    rf: int,
+    fn: submodular.SetFunction,
+    *,
+    gram_free: bool,
+    metric: str = "cosine",
+    gram_block: int = 2048,
+    use_pallas: bool = False,
+    lazy_threshold: float | None = 0.125,
+    pre_normalized: bool = False,
+) -> tuple[np.ndarray, dict]:
+    """Shared partition-then-refine driver (deterministic greedy both levels).
+
+    Level 0: exact greedy inside every partition, oversampled to
+    ``min(n_c, rf·k_c)`` winners; level 1: ``greedy.refine`` over the union
+    of winners down to exactly ``k``.  Peak memory is O(n_max·d) gram-free
+    (O(n_max²) with a materialized Gram) — the partition size, not the
+    ground-set size.
+    """
+    kern = dict(gram_free=gram_free, metric=metric, gram_block=gram_block,
+                use_pallas=use_pallas, pre_normalized=pre_normalized)
+    active = [(p, b) for p, b in zip(parts, budgets)
+              if b > 0 and len(p.indices) > 0]
+    if not active:
+        return np.zeros((0,), np.int64), {
+            "n_partitions": len(parts), "union_size": 0,
+            "peak_partition_rows": 0, "refine_factor": rf,
+        }
+    k_sels = [min(len(p.indices), rf * b) for p, b in active]
+    n_max = max(len(p.indices) for p, _ in active)
+    k_max = max(k_sels)
+    winners = []
+    for (p, _), k_sel in zip(active, k_sels):
+        A, valid = _hier_kernel(features[p.indices], n_max, **kern)
+        res = greedy(fn, A, k_max, valid=valid, n=n_max)
+        # first k_sel picks of the padded run == the unpadded run's picks
+        local = np.asarray(res.indices, np.int64)[:k_sel]
+        winners.append(np.asarray(p.indices, np.int64)[local])
+    union = np.concatenate(winners)
+    if len(union) > k:
+        n_u = len(union)
+        A, valid = _hier_kernel(features[union], n_u, **kern)
+        lazy_budget = None
+        if lazy_threshold is not None and fn.lazy is not None:
+            b = max(1, int(n_u * lazy_threshold))
+            lazy_budget = b if b < n_u else None
+        res = run_refine(fn, A, k, valid=valid, lazy_budget=lazy_budget)
+        selected = union[np.asarray(res.indices, np.int64)]
+    else:
+        selected = union
+    info = {
+        "n_partitions": len(parts),
+        "union_size": int(len(union)),
+        "peak_partition_rows": int(n_max),
+        "refine_factor": rf,
+    }
+    return selected, info
+
+
+def hierarchical_select(
+    features: np.ndarray,
+    k: int,
+    *,
+    labels: np.ndarray | None = None,
+    partition: str | PartitionStrategy = "random_blocks",
+    block_size: int = 4096,
+    seed: int = 0,
+    refine_factor: int = 2,
+    fn_name: str = "facility_location",
+    gram_free: bool = True,
+    metric: str = "cosine",
+    gram_block: int = 2048,
+    use_pallas: bool = False,
+    graph_cut_lambda: float = 0.4,
+    lazy_threshold: float | None = 0.125,
+    return_info: bool = False,
+):
+    """One-shot hierarchical subset selection (partition → greedy → refine).
+
+    The deterministic two-level scheme: a :class:`PartitionStrategy` splits
+    the ground set, exact greedy picks ``refine_factor·k_c`` winners inside
+    each partition (one compiled program for the whole sweep — partitions
+    are padded to the largest), and a level-1 ``greedy.refine`` over the
+    union returns exactly ``k`` global indices.  With FL and enough
+    oversampling the objective stays within a few percent of the exact flat
+    greedy (asserted ≥ 0.95× in tests) while peak memory tracks the
+    *partition* size — ground sets of 2^20+ rows select on hardware where
+    the flat pass cannot even hold its init.
+
+    Returns the (k,) int64 global indices; with ``return_info=True`` also a
+    dict of the run's geometry (partition count, union size, peak partition
+    rows).
+    """
+    features = np.asarray(features)
+    m = features.shape[0]
+    k = max(0, min(int(k), m))
+    if k == 0:
+        empty = np.zeros((0,), np.int64)
+        return (empty, {"n_partitions": 0, "union_size": 0,
+                        "peak_partition_rows": 0,
+                        "refine_factor": refine_factor}) if return_info else empty
+    strategy = (partition if isinstance(partition, PartitionStrategy)
+                else make_partition_strategy(partition, block_size=block_size,
+                                             seed=seed))
+    parts = strategy.partition(labels, m)
+    budgets = proportional_budgets(parts, k)
+    rf = max(1, int(refine_factor))
+    pre = MiloPreprocessor(
+        easy_fn=fn_name, gram_free=gram_free, metric=metric,
+        gram_block=gram_block, use_pallas=use_pallas,
+        graph_cut_lambda=graph_cut_lambda,
+    )
+    fn = pre._set_fn(fn_name)
+    selected, info = _two_level_select(
+        features, k, parts, budgets, rf, fn, gram_free=gram_free,
+        metric=metric, gram_block=gram_block, use_pallas=use_pallas,
+        lazy_threshold=lazy_threshold,
+    )
+    return (selected, info) if return_info else selected
+
+
+def targeted_select(
+    features: np.ndarray,
+    queries: np.ndarray,
+    k: int,
+    *,
+    labels: np.ndarray | None = None,
+    partition: str | PartitionStrategy = "by_class",
+    block_size: int = 4096,
+    seed: int = 0,
+    refine_factor: int = 4,
+    return_info: bool = False,
+):
+    """Query-conditioned (SMI-style) targeted selection over partition winners.
+
+    The auto-labeling / active-learning shape: ``queries`` holds a handful
+    of exemplar embeddings of the slice you care about, and the objective is
+    query facility location — f(S) = Σ_q max_{a∈S} sim(a, q) — so the subset
+    *covers the queries*, not the ground set.  Both levels use the query
+    objective: per-partition winners are the rows most relevant to the
+    queries, and the level-1 refine trades them off globally.  Gram-free
+    cosine only (the query gains are O(n·q) feature contractions).
+
+    Returns the (k,) int64 global indices (plus the geometry dict with
+    ``return_info=True``).
+    """
+    features = np.asarray(features)
+    m = features.shape[0]
+    k = max(0, min(int(k), m))
+    if k == 0:
+        empty = np.zeros((0,), np.int64)
+        return (empty, {"n_partitions": 0, "union_size": 0,
+                        "peak_partition_rows": 0,
+                        "refine_factor": refine_factor}) if return_info else empty
+    zn = np.asarray(normalize_rows(jnp.asarray(features, jnp.float32)))
+    zq = np.asarray(normalize_rows(jnp.asarray(queries, jnp.float32)))
+    fn = gram_free_mod.make_query_facility_location(zq)
+    strategy = (partition if isinstance(partition, PartitionStrategy)
+                else make_partition_strategy(partition, block_size=block_size,
+                                             seed=seed))
+    parts = strategy.partition(labels, m)
+    budgets = proportional_budgets(parts, k)
+    rf = max(1, int(refine_factor))
+    selected, info = _two_level_select(
+        zn, k, parts, budgets, rf, fn, gram_free=True, pre_normalized=True,
+        lazy_threshold=None,
+    )
+    return (selected, info) if return_info else selected
 
 
 def preprocess_with_encoder(

@@ -1,20 +1,46 @@
-"""Class-wise data partitioning (paper §3.2).
+"""Partition strategies for two-level (partition-then-refine) selection.
 
 Building the m x m similarity kernel is memory-prohibitive for large m; the
-paper partitions the dataset by class label, runs selection within each class,
-and merges.  For a balanced dataset with c classes this cuts kernel memory by
-c².  Budgets are apportioned proportionally to class sizes (largest-remainder
-rounding so the total is exactly k).
+paper partitions the dataset by class label (§3.2), runs selection within
+each class, and merges.  For a balanced dataset with c classes this cuts
+kernel memory by c².  Budgets are apportioned proportionally to partition
+sizes (largest-remainder rounding so the total is exactly k).
+
+The paper's class-wise split is one instance of a more general decomposition:
+a :class:`PartitionStrategy` maps the ground set to disjoint
+:class:`Partition`\\ s, level-0 selection runs independently inside each one
+(the existing bucketed engines, compile-once-per-bucket), and — when a
+partition is still too large for one engine invocation, or the caller wants
+the two-level refine of [Mirzasoleiman et al.] — a level-1 greedy pass over
+the union of per-partition winners restores global quality at sub-linear
+memory in the ground-set size.  Strategies:
+
+``by_class``
+    The paper's split (default).  Bit-identical to the historical
+    ``partition_by_class`` behaviour, including the single catch-all
+    partition when no labels are given.
+``random_blocks``
+    Seeded random permutation chopped into near-equal blocks of at most
+    ``block_size`` rows.  Label-free, so it scales selection to ground sets
+    (n ≥ 2^20) where even one class overflows device memory; pair with
+    ``refine_factor > 1`` so the level-1 refine can trade winners across
+    block boundaries.
+``balanced_blocks``
+    Class-wise first, then any class larger than ``block_size`` is split
+    into near-equal sub-blocks (each keeping the class label) — the
+    within-class sub-partitioning for hugely imbalanced datasets.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Sequence
+import dataclasses
+import math
+from typing import Any, NamedTuple, Sequence
 
 import numpy as np
 
 
 class Partition(NamedTuple):
-    """One class shard: global indices of its members."""
+    """One ground-set shard: global indices of its members."""
 
     label: int
     indices: np.ndarray  # (n_c,) int64 global indices
@@ -26,6 +52,117 @@ def partition_by_class(labels: np.ndarray) -> list[Partition]:
     for lab in np.unique(labels):
         parts.append(Partition(int(lab), np.nonzero(labels == lab)[0]))
     return parts
+
+
+class PartitionStrategy:
+    """How to decompose a ground set into disjoint level-0 partitions.
+
+    ``partition(labels, m)`` returns disjoint :class:`Partition`\\ s covering
+    ``range(m)``; ``labels`` is None when the caller selects label-free
+    (``classwise=False`` or no labels exist).  ``config()`` returns the
+    JSON-safe provenance dict stamped into hierarchical artifacts — only the
+    keys the strategy actually depends on, so flat (``by_class``) artifacts
+    can omit partition provenance entirely without ambiguity.
+    """
+
+    name: str = ""
+
+    def partition(self, labels: np.ndarray | None, m: int) -> list[Partition]:
+        raise NotImplementedError
+
+    def config(self) -> dict[str, Any]:
+        return {"partition": self.name}
+
+
+@dataclasses.dataclass(frozen=True)
+class ByClass(PartitionStrategy):
+    """The paper's class-wise split; one catch-all partition without labels."""
+
+    name = "by_class"
+
+    def partition(self, labels: np.ndarray | None, m: int) -> list[Partition]:
+        if labels is None:
+            return [Partition(0, np.arange(m, dtype=np.int64))]
+        return partition_by_class(np.asarray(labels, np.int64))
+
+
+@dataclasses.dataclass(frozen=True)
+class RandomBlocks(PartitionStrategy):
+    """Seeded random near-equal blocks of at most ``block_size`` rows."""
+
+    block_size: int = 4096
+    seed: int = 0
+
+    name = "random_blocks"
+
+    def __post_init__(self):
+        if self.block_size < 1:
+            raise ValueError(f"block_size must be >= 1, got {self.block_size}")
+
+    def partition(self, labels: np.ndarray | None, m: int) -> list[Partition]:
+        if m <= 0:
+            return []
+        perm = np.random.default_rng(self.seed).permutation(m).astype(np.int64)
+        n_blocks = max(1, math.ceil(m / self.block_size))
+        # sorted within each block: selection is order-invariant over the
+        # slice, and ascending gathers keep the feature reads contiguous
+        return [Partition(b, np.sort(chunk))
+                for b, chunk in enumerate(np.array_split(perm, n_blocks))]
+
+    def config(self) -> dict[str, Any]:
+        return {"partition": self.name, "partition_block": self.block_size,
+                "partition_seed": self.seed}
+
+
+@dataclasses.dataclass(frozen=True)
+class BalancedBlocks(PartitionStrategy):
+    """Class-wise split, then classes above ``block_size`` rows are chopped
+    into near-equal sub-blocks that keep the class label — the class purity
+    of ``by_class`` with the bounded per-partition memory of blocks."""
+
+    block_size: int = 4096
+
+    name = "balanced_blocks"
+
+    def __post_init__(self):
+        if self.block_size < 1:
+            raise ValueError(f"block_size must be >= 1, got {self.block_size}")
+
+    def partition(self, labels: np.ndarray | None, m: int) -> list[Partition]:
+        out: list[Partition] = []
+        for p in ByClass().partition(labels, m):
+            n_p = len(p.indices)
+            if n_p <= self.block_size:
+                out.append(p)
+                continue
+            n_blocks = math.ceil(n_p / self.block_size)
+            out.extend(Partition(p.label, chunk)
+                       for chunk in np.array_split(p.indices, n_blocks))
+        return out
+
+    def config(self) -> dict[str, Any]:
+        return {"partition": self.name, "partition_block": self.block_size}
+
+
+#: registry of strategy names accepted by ``make_partition_strategy``
+PARTITION_STRATEGIES = ("by_class", "random_blocks", "balanced_blocks")
+
+
+def make_partition_strategy(
+    name: str, *, block_size: int = 4096, seed: int = 0
+) -> PartitionStrategy:
+    """Build a strategy from its config-string form (the session/artifact
+    representation).  ``block_size``/``seed`` are ignored by strategies that
+    do not use them, mirroring which keys ``config()`` stamps."""
+    if name == "by_class":
+        return ByClass()
+    if name == "random_blocks":
+        return RandomBlocks(block_size=block_size, seed=seed)
+    if name == "balanced_blocks":
+        return BalancedBlocks(block_size=block_size)
+    raise ValueError(
+        f"unknown partition strategy {name!r}; available: {PARTITION_STRATEGIES}"
+    )
 
 
 def proportional_budgets(parts: Sequence[Partition], k: int) -> list[int]:
@@ -61,12 +198,25 @@ def proportional_budgets(parts: Sequence[Partition], k: int) -> list[int]:
         budgets[i] += take
         remainder -= take
         i += 1
+    # Floor of 1: largest-remainder alone can starve tiny partitions next to
+    # a dominant one (sizes [1,1,1,97], k=4 -> [0,0,0,4]), breaking the
+    # documented min-1 guarantee.  Whenever the (clamped) budget can cover
+    # every non-empty partition, move single units from the largest budgets
+    # (which must hold >= 2 by pigeonhole while any starved partition
+    # remains) to the starved ones.  Apportionments that already satisfy the
+    # floor — every historical fixture — pass through bit-identically.
+    nonempty = sizes > 0
+    if k >= int(nonempty.sum()):
+        for idx in np.nonzero(nonempty & (budgets == 0))[0]:
+            donor = int(np.argmax(np.where(budgets >= 2, budgets, -1)))
+            budgets[donor] -= 1
+            budgets[idx] += 1
     return [int(b) for b in budgets]
 
 
 def merge_class_selections(
     parts: Sequence[Partition], local_selections: Sequence[np.ndarray]
 ) -> np.ndarray:
-    """Map per-class local indices back to global dataset indices."""
+    """Map per-partition local indices back to global dataset indices."""
     out = [np.asarray(p.indices)[np.asarray(sel)] for p, sel in zip(parts, local_selections)]
     return np.concatenate(out) if out else np.zeros((0,), np.int64)

@@ -77,6 +77,7 @@ from repro.core.greedy import (
     greedy,
     greedy_importance,
     lazy_greedy,
+    refine,
     stochastic_candidate_count,
     stochastic_greedy,
 )
@@ -357,6 +358,13 @@ def _compiled(kind: str, fn: SetFunction, mesh: Mesh, axis: str, n: int,
         def inner(zs, v):
             return greedy(fn, zs, k, valid=v, n=n)
 
+    elif kind == "refine":
+        k, lazy_budget, lazy_two_level = extra
+
+        def inner(zs, v):
+            return refine(fn, zs, k, valid=v, n=n, lazy_budget=lazy_budget,
+                          two_level=lazy_two_level)
+
     elif kind == "lazy":
         k, budget, two_level = extra
 
@@ -437,6 +445,28 @@ def sharded_lazy_greedy(
     n = _check_shardable(z, mesh, axis)
     run = _compiled("lazy", fn, mesh, axis, n, k, budget, two_level)
     return LazyGreedyResult(*run(z, _valid_or_all(n, valid)))
+
+
+def sharded_refine(
+    fn: SetFunction, z: jax.Array, k: int, *, mesh: Mesh, axis: str = AXIS,
+    valid: jax.Array | None = None, lazy_budget: int | None = None,
+    lazy_two_level: bool = False,
+) -> GreedyResult:
+    """``greedy.refine`` (the hierarchical level-1 pass) over row-sharded z.
+
+    Same lazy dispatch rule as the single-device entry point: routes through
+    ``lazy_greedy`` when a budget is given and the set function has lazy
+    hooks, plain ``greedy`` otherwise.  The union of level-0 winners is small
+    relative to the ground set, but on pow2-padded unions that divide the
+    mesh this keeps even the refine's O(union²·d) FL gains off a single
+    device."""
+    n = _check_shardable(z, mesh, axis)
+    if not (lazy_budget is not None and fn.lazy is not None
+            and 1 <= lazy_budget < n):
+        lazy_budget = None
+    run = _compiled("refine", fn, mesh, axis, n, k, lazy_budget,
+                    lazy_two_level)
+    return GreedyResult(*run(z, _valid_or_all(n, valid)))
 
 
 def sharded_stochastic_greedy(

@@ -54,7 +54,11 @@ from typing import Any, Sequence
 
 import numpy as np
 
-from repro.core.partition import partition_by_class, proportional_budgets
+from repro.core.partition import (
+    PartitionStrategy,
+    partition_by_class,
+    proportional_budgets,
+)
 
 #: Accepted values for the ``policy`` knob (``None`` = report-only).
 FIREWALL_POLICIES = ("raise", "repair", "quarantine")
@@ -154,9 +158,20 @@ def _duplicate_rows(feats: np.ndarray) -> list[int]:
 
 
 def _class_geometry(
-    labs: np.ndarray, m: int, subset_fraction: float | None
+    labs: np.ndarray,
+    m: int,
+    subset_fraction: float | None,
+    strategy: PartitionStrategy | None = None,
 ) -> tuple[list[int], list[int], list[int]]:
-    """(empty, singleton, overbudget) class labels for the ground set."""
+    """(empty, singleton, overbudget) class labels for the ground set.
+
+    ``strategy`` makes the overbudget check mirror the decomposition the
+    preprocessor will actually apply (block strategies can split a class
+    into several partitions, changing which budgets saturate); the empty /
+    singleton checks stay label-based — they describe the data, not the
+    decomposition.  Partition labels deduplicate through the set: a class
+    split into multiple saturated blocks is reported once.
+    """
     if labs.size == 0:
         return [], [], []
     counts = np.bincount(labs, minlength=int(labs.max()) + 1)
@@ -165,10 +180,11 @@ def _class_geometry(
     overbudget: list[int] = []
     if subset_fraction is not None and m > 0:
         k = max(1, round(subset_fraction * m))
-        parts = partition_by_class(labs)
+        parts = (partition_by_class(labs) if strategy is None
+                 else strategy.partition(labs, m))
         budgets = proportional_budgets(parts, k)
-        overbudget = [int(p.label) for p, b in zip(parts, budgets)
-                      if b >= len(p.indices)]
+        overbudget = sorted({int(p.label) for p, b in zip(parts, budgets)
+                             if b >= len(p.indices)})
     return empty, singleton, overbudget
 
 
@@ -179,6 +195,7 @@ def validate_features(
     policy: str | None = "raise",
     subset_fraction: float | None = None,
     eps: float = 1e-8,
+    strategy: PartitionStrategy | None = None,
 ) -> tuple[np.ndarray, DataHealthReport]:
     """Screen a ground set; return ``(features_out, report)``.
 
@@ -219,7 +236,7 @@ def validate_features(
         if labs.shape[0] != m:
             raise ValueError(f"labels length {labs.shape[0]} != rows {m}")
         empty, singleton, overbudget = _class_geometry(
-            labs, m, subset_fraction)
+            labs, m, subset_fraction, strategy)
         report.empty_classes = empty
         report.singleton_classes = singleton
         report.overbudget_classes = overbudget

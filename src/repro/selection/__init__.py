@@ -4,8 +4,8 @@
   (indices + loss weights + phase + provenance) replacing bare
   ``indices_for_epoch`` index arrays.
 * ``build_selector(name, **cfg)`` — registry factory covering MILO,
-  MILO-Fixed, Random, AdaptiveRandom, EL2N, SelfSupPrune, CRAIG-PB,
-  GRAD-MATCH-PB, GLISTER, and Full.
+  MILO-Fixed, MILO-Hier, MILO-Targeted, Random, AdaptiveRandom, EL2N,
+  SelfSupPrune, CRAIG-PB, GRAD-MATCH-PB, GLISTER, and Full.
 * ``MiloSession`` — one-call facade: ``preprocess() / train() / tune()``.
 """
 from repro.selection.plan import PHASES, SelectionPlan, uniform_plan
@@ -27,6 +27,8 @@ from repro.selection.selectors import (
     GradMatchPBConfig,
     MiloConfig,
     MiloFixedConfig,
+    MiloHierConfig,
+    MiloTargetedConfig,
     RandomConfig,
     SelfSupPruneConfig,
 )
@@ -54,6 +56,8 @@ __all__ = [
     "TrainReport",
     "MiloConfig",
     "MiloFixedConfig",
+    "MiloHierConfig",
+    "MiloTargetedConfig",
     "FullConfig",
     "RandomConfig",
     "AdaptiveRandomConfig",

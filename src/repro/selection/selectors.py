@@ -1,4 +1,4 @@
-"""The ten registered selection strategies (MILO + the paper's §4 baselines).
+"""The twelve registered selection strategies (MILO + the paper's §4 baselines).
 
 Each strategy is a ``Selector`` built from a config dataclass through the
 registry, and returns weighted ``SelectionPlan``s:
@@ -8,6 +8,8 @@ registry, and returns weighted ``SelectionPlan``s:
   ============== ============================== =========================
   milo           MILO (SGE→WRE curriculum)      uniform
   milo_fixed     MILO (Fixed)                   uniform
+  milo_hier      MILO (hierarchical refine)     uniform
+  milo_targeted  query FL (SMI-style targeted)  uniform
   random         RANDOM                         uniform
   adaptive_random ADAPTIVE-RANDOM               uniform
   el2n           EL2N [Paul'21]                 uniform
@@ -34,6 +36,7 @@ from repro.baselines import selectors as legacy
 from repro.core.curriculum import CurriculumConfig
 from repro.core.metadata import MiloMetadata
 from repro.core.milo import MiloSelector as _LegacyMiloSelector
+from repro.core.milo import hierarchical_select, targeted_select
 from repro.selection.base import Selector
 from repro.selection.plan import SelectionPlan, uniform_plan
 from repro.selection.registry import register
@@ -202,6 +205,80 @@ class MiloFixedPlanSelector(Selector):
     def plan(self, epoch: int) -> SelectionPlan:
         return uniform_plan(
             self._inner.indices_for_epoch(epoch), "fixed", epoch, selector="milo_fixed"
+        )
+
+
+@dataclasses.dataclass
+class MiloHierConfig:
+    features: np.ndarray
+    k: int
+    # None → unsupervised partitioning (random_blocks / single block)
+    labels: np.ndarray | None = None
+    # "by_class" | "random_blocks" | "balanced_blocks"
+    partition: str = "random_blocks"
+    partition_block: int = 4096
+    partition_seed: int = 0
+    # level-0 oversampling: each partition keeps min(n_c, refine_factor·k_c)
+    refine_factor: int = 2
+    fn_name: str = "facility_location"
+    gram_free: bool = True
+
+
+@register("milo_hier", MiloHierConfig, paper="MILO (hierarchical)",
+          doc="two-level partition→greedy→refine subset; partition-sized memory")
+class MiloHierPlanSelector(Selector):
+    """One fixed subset from the hierarchical partition-then-refine pipeline
+    (sub-linear peak memory: per-partition greedy + level-1 refine)."""
+
+    def __init__(self, cfg: MiloHierConfig):
+        self.cfg = cfg
+        self._idx, self.info = hierarchical_select(
+            cfg.features, cfg.k, labels=cfg.labels, partition=cfg.partition,
+            block_size=cfg.partition_block, seed=cfg.partition_seed,
+            refine_factor=cfg.refine_factor, fn_name=cfg.fn_name,
+            gram_free=cfg.gram_free, return_info=True,
+        )
+
+    def plan(self, epoch: int) -> SelectionPlan:
+        return uniform_plan(
+            self._idx, "fixed", epoch, selector="milo_hier",
+            partition=self.cfg.partition,
+            refine_factor=self.cfg.refine_factor,
+        )
+
+
+@dataclasses.dataclass
+class MiloTargetedConfig:
+    features: np.ndarray
+    queries: np.ndarray
+    k: int
+    labels: np.ndarray | None = None
+    partition: str = "by_class"
+    partition_block: int = 4096
+    partition_seed: int = 0
+    refine_factor: int = 4
+
+
+@register("milo_targeted", MiloTargetedConfig, paper="query FL (SMI)",
+          doc="query-conditioned targeted selection over partition winners")
+class MiloTargetedPlanSelector(Selector):
+    """Fixed query-covering subset: query facility location both levels, so
+    the plan covers the query slice rather than the whole ground set."""
+
+    def __init__(self, cfg: MiloTargetedConfig):
+        self.cfg = cfg
+        self._idx, self.info = targeted_select(
+            cfg.features, cfg.queries, cfg.k, labels=cfg.labels,
+            partition=cfg.partition, block_size=cfg.partition_block,
+            seed=cfg.partition_seed, refine_factor=cfg.refine_factor,
+            return_info=True,
+        )
+
+    def plan(self, epoch: int) -> SelectionPlan:
+        return uniform_plan(
+            self._idx, "fixed", epoch, selector="milo_targeted",
+            partition=self.cfg.partition,
+            refine_factor=self.cfg.refine_factor,
         )
 
 

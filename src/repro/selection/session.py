@@ -100,6 +100,16 @@ class MiloSessionConfig:
     # (None = off): "raise" | "repair" | "quarantine" — see
     # repro.health.firewall.  Recorded in artifact provenance (data_health).
     firewall: str | None = None
+    # hierarchical partition-then-refine selection (see core.partition /
+    # MiloPreprocessor): level-0 decomposition strategy ("by_class" is the
+    # paper's flat path), block size + permutation seed for the block
+    # strategies, and the level-1 oversampling factor (1 = refine off).
+    # Stamped into artifact provenance and enforced on reuse whenever the
+    # hierarchical path is active.
+    partition: str = "by_class"
+    partition_block: int = 4096
+    partition_seed: int = 0
+    refine_factor: int = 1
     # degraded-mode selection: selector names to fall back to (in order)
     # when the primary hits degenerate math (e.g. ("adaptive_random",)).
     # Every hop is recorded in plan provenance — see repro.health.fallback.
@@ -154,6 +164,10 @@ class MiloSessionConfig:
             lazy_two_level=self.lazy_two_level,
             exact_sge_candidates=self.exact_sge_candidates,
             firewall=self.firewall,
+            partition=self.partition,
+            partition_block=self.partition_block,
+            partition_seed=self.partition_seed,
+            refine_factor=self.refine_factor,
         )
 
     def resolved_prep_seed(self) -> int:
@@ -343,9 +357,38 @@ class MiloSession:
                 f"{{'prep_seed': ({stored_seed}, {expected_seed})}} "
                 "(stored, expected)"
             )
+        self._check_partition_config(md, "adopted artifact")
         self.metadata = md
         self.loaded_from_artifact = loaded
         return md
+
+    def _check_partition_config(self, md: MiloMetadata, where: str) -> None:
+        """Hierarchical provenance guard shared by artifact load and adopt.
+
+        Partition keys are stamped only when the hierarchical path is active
+        (see ``MiloPreprocessor._preprocess_clean``), so absence means the
+        flat path: legacy flat artifacts keep loading into flat sessions,
+        while any partition/refine disagreement — including a hierarchical
+        session reading a flat artifact, whose bank was built over a
+        different decomposition — refuses."""
+        cfg = self.config
+        stored_part = md.config.get("partition", "by_class")
+        stored_rf = int(md.config.get("refine_factor", 1))
+        want_rf = max(1, int(cfg.refine_factor))
+        bad: dict[str, tuple] = {}
+        if stored_part != cfg.partition:
+            bad["partition"] = (stored_part, cfg.partition)
+        if stored_rf != want_rf:
+            bad["refine_factor"] = (stored_rf, want_rf)
+        # block/seed are stamped only by the strategies that depend on them
+        for key, want in (("partition_block", cfg.partition_block),
+                          ("partition_seed", cfg.partition_seed)):
+            if key in md.config and int(md.config[key]) != int(want):
+                bad[key] = (md.config[key], want)
+        if bad:
+            raise MetadataMismatchError(
+                f"{where}: config mismatch on {bad} (stored, expected)"
+            )
 
     def _load_artifact(
         self,
@@ -431,6 +474,10 @@ class MiloSession:
                 f"{{'firewall': ({stored_fw!r}, {cfg.firewall!r})}} "
                 "(stored, expected)"
             )
+        # hierarchical decomposition provenance: the bank's indices are only
+        # meaningful for the partition geometry + refine factor they were
+        # selected under
+        self._check_partition_config(md, str(cfg.metadata_path))
         return md
 
     def _require_metadata(

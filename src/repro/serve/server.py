@@ -479,17 +479,22 @@ class MiloServer:
         if already:
             return {"artifact_key": key, "warmed_geometries": 0,
                     "tune_replayed": False}
-        from repro.core.partition import partition_by_class, proportional_budgets
+        from repro.core.partition import proportional_budgets
 
         labs = (np.zeros(len(features), np.int64) if labels is None
                 else np.asarray(labels))
-        parts = partition_by_class(labs) if cfg.classwise else None
-        if parts is not None and len(parts) > 1:
+        pre = cfg.preprocessor()
+        # replay the preprocessor's own decomposition (strategy-aware, so
+        # hierarchical geometries warm the same per-partition + refine
+        # programs a rebuild would compile)
+        parts = pre.partition_strategy().partition(
+            labs if cfg.classwise else None, len(features))
+        if len(parts) > 1:
             buckets = [(len(p.indices), b)
                        for p, b in zip(parts, proportional_budgets(parts, md.k))]
         else:
             buckets = [(len(features), md.k)]
-        warmed = cfg.preprocessor().warmup(buckets, d=int(np.shape(features)[1]))
+        warmed = pre.warmup(buckets, d=int(np.shape(features)[1]))
         replayed = False
         if val_x is not None and val_y is not None and space is not None:
             session.tune(features, labels, val_x, val_y, space,

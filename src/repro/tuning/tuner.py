@@ -168,6 +168,43 @@ def stack_configs(configs: list[dict]) -> dict[str, np.ndarray]:
     return {k: np.asarray([c[k] for c in configs]) for k in sorted(keys)}
 
 
+def shape_bucketed_objective(
+    batched_fn: Callable[[list[dict], int], Any],
+    shape_keys: tuple[str, ...] = ("hidden",),
+) -> Callable[[list[dict], int], list[float]]:
+    """Make a ``batched_objective`` safe for shape-changing hyperparameters.
+
+    A vmapped trial function can only batch configs whose traced shapes
+    agree — a rung mixing ``hidden=8`` and ``hidden=16`` networks cannot be
+    stacked into one ``vmap``.  This wrapper groups the rung's configs by
+    the values of ``shape_keys`` (first-appearance order, so the inner
+    function sees deterministic bucket order), calls ``batched_fn`` once
+    per bucket, and scatters the scores back into the original config
+    order.  The trial stream and ``best_config`` are identical to feeding
+    the rung through ``batched_fn`` directly when all shapes agree: one
+    bucket → one pass-through call.
+    """
+
+    def objective(configs: list[dict], budget: int) -> list[float]:
+        buckets: dict[tuple, list[int]] = {}
+        for i, cfg in enumerate(configs):
+            sig = tuple((key, cfg[key]) for key in shape_keys if key in cfg)
+            buckets.setdefault(sig, []).append(i)
+        scores: list[float | None] = [None] * len(configs)
+        for sig, idxs in buckets.items():
+            vals = [float(v) for v in
+                    batched_fn([configs[i] for i in idxs], budget)]
+            if len(vals) != len(idxs):
+                raise ValueError(
+                    f"batched_fn returned {len(vals)} scores for "
+                    f"{len(idxs)} configs (shape bucket {sig})")
+            for i, v in zip(idxs, vals):
+                scores[i] = v
+        return [float(s) for s in scores]
+
+    return objective
+
+
 #: hyperband checkpoint file format version
 HB_CHECKPOINT_FORMAT = 1
 

@@ -71,6 +71,89 @@ if st is not None:
             assert 0 <= b <= s
 
 
+if st is not None:
+    @settings(max_examples=30, deadline=None)
+    @given(
+        sizes=st.lists(st.integers(0, 50), min_size=1, max_size=8),
+        k=st.integers(1, 60),
+    )
+    def test_proportional_budgets_min_one_floor(sizes, k):
+        """Whenever k can cover every non-empty partition, each non-empty
+        partition must receive budget >= 1 — pure proportional rounding
+        starves small partitions next to a dominant one."""
+        parts = []
+        lo = 0
+        for i, s in enumerate(sizes):
+            parts.append(Partition(i, np.arange(lo, lo + s)))
+            lo += s
+        total = sum(sizes)
+        if total == 0:
+            return
+        k = min(k, total)
+        budgets = proportional_budgets(parts, k)
+        assert sum(budgets) == k
+        n_nonempty = sum(1 for s in sizes if s > 0)
+        for b, s in zip(budgets, sizes):
+            assert 0 <= b <= s
+            if k >= n_nonempty and s > 0:
+                assert b >= 1, (sizes, k, budgets)
+
+
+def test_proportional_budgets_dominant_partition_regression():
+    """The exact starvation case the floor fixes: three singletons next to
+    a 97-row block at k=4 rounded to [0,0,0,4]; every non-empty partition
+    must now get its seat."""
+    sizes = [1, 1, 1, 97]
+    parts, lo = [], 0
+    for i, s in enumerate(sizes):
+        parts.append(Partition(i, np.arange(lo, lo + s)))
+        lo += s
+    budgets = proportional_budgets(parts, 4)
+    assert budgets == [1, 1, 1, 1]
+    # one seat short of full coverage: proportional rounding unchanged
+    # (the floor only applies when k can cover every non-empty partition)
+    assert sum(proportional_budgets(parts, 3)) == 3
+
+
+if st is not None:
+    @settings(max_examples=30, deadline=None)
+    @given(
+        sizes=st.lists(st.integers(1, 20), min_size=1, max_size=6),
+        seed=st.integers(0, 100),
+    )
+    def test_merge_class_selections_two_level_roundtrip(sizes, seed):
+        """Local->global index lifting must compose through a nested
+        two-level decomposition: partition the ground set into
+        non-contiguous blocks (incl. singletons), select locally, merge,
+        re-partition the union, select again, merge again — every index
+        stays a valid, unique ground-set row."""
+        rng = np.random.default_rng(seed)
+        m = sum(sizes)
+        perm = rng.permutation(m)
+        parts, lo = [], 0
+        for i, s in enumerate(sizes):
+            # non-contiguous by construction: indices come from a permutation
+            parts.append(Partition(i, np.sort(perm[lo:lo + s]).astype(np.int64)))
+            lo += s
+        # level 0: pick up to 3 local winners per partition
+        sel0 = [rng.permutation(len(p.indices))[: min(3, len(p.indices))]
+                for p in parts]
+        union = merge_class_selections(parts, sel0)
+        assert len(set(union.tolist())) == len(union)
+        assert all(0 <= g < m for g in union)
+        # level 1: re-partition the union rows and select again
+        half = max(1, len(union) // 2)
+        parts1 = [Partition(0, np.arange(half)),
+                  Partition(1, np.arange(half, len(union)))]
+        parts1 = [p for p in parts1 if len(p.indices)]
+        sel1 = [rng.permutation(len(p.indices))[: min(2, len(p.indices))]
+                for p in parts1]
+        local1 = merge_class_selections(parts1, sel1)
+        final = union[local1]
+        assert len(set(final.tolist())) == len(final)
+        assert set(final.tolist()) <= set(union.tolist())
+
+
 def test_partition_roundtrip():
     labels = np.asarray([2, 0, 1, 0, 2, 2, 1])
     parts = partition_by_class(labels)

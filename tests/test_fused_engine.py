@@ -26,7 +26,12 @@ from repro.models.classifier import init_mlp, nesterov_update, weighted_nll
 from repro.selection import build_selector
 from repro.train.engine import epoch_engine, make_superstep, segment_length
 from repro.train.trainer import Trainer, TrainerConfig
-from repro.tuning.tuner import RandomSearch, hyperband, stack_configs
+from repro.tuning.tuner import (
+    RandomSearch,
+    hyperband,
+    shape_bucketed_objective,
+    stack_configs,
+)
 
 N, D, CLASSES = 256, 8, 4
 K, BATCH = 96, 16          # 6 steps per epoch
@@ -386,6 +391,52 @@ def test_batched_hyperband_guards():
     with pytest.raises(ValueError, match="scores"):
         hyperband(None, RandomSearch(space, seed=0), max_budget=9, eta=3,
                   batched_objective=lambda cfgs, b: [0.0])
+
+
+def test_shape_bucketed_hyperband_identical_to_sequential():
+    """A rung mixing ``hidden`` widths cannot be stacked into one vmap;
+    the shape-bucketed wrapper must vmap within each hidden bucket and
+    still reproduce the sequential trial stream EXACTLY."""
+
+    def score_impl(lr, hidden):
+        return -jnp.abs(jnp.log10(lr) + 1.0) - 0.01 * jnp.abs(hidden - 16.0)
+
+    score_batch = jax.jit(jax.vmap(score_impl, in_axes=(0, None)))
+    calls: list[tuple[int, int]] = []
+
+    def objective(cfg, budget):
+        return float(score_impl(jnp.float32(cfg["lr"]),
+                                jnp.float32(cfg["hidden"])))
+
+    def batched(configs, budget):
+        hidden = {c["hidden"] for c in configs}
+        assert len(hidden) == 1, "bucketing must hand same-shape configs only"
+        calls.append((len(configs), hidden.pop()))
+        lrs = jnp.asarray(stack_configs(configs)["lr"], jnp.float32)
+        return np.asarray(score_batch(lrs, jnp.float32(configs[0]["hidden"])))
+
+    space = {"lr": ("log", 1e-4, 1.0), "hidden": ("choice", [8, 16])}
+    seq = hyperband(objective, RandomSearch(space, seed=2), max_budget=9, eta=3)
+    bat = hyperband(None, RandomSearch(space, seed=2), max_budget=9, eta=3,
+                    batched_objective=shape_bucketed_objective(batched))
+    assert seq.best_config == bat.best_config
+    assert [t["config"] for t in seq.trials] == [t["config"] for t in bat.trials]
+    np.testing.assert_allclose([t["score"] for t in seq.trials],
+                               [t["score"] for t in bat.trials], rtol=1e-6)
+    # hidden really varied, so the wrapper had to split at least one rung
+    assert len({h for _, h in calls}) == 2
+    assert any(n > 1 for n, _ in calls), "same-hidden configs must batch"
+
+
+def test_shape_bucketed_objective_guards():
+    wrapped = shape_bucketed_objective(lambda cfgs, b: [0.0])
+    with pytest.raises(ValueError, match="scores"):
+        wrapped([{"lr": 0.1, "hidden": 8}, {"lr": 0.2, "hidden": 8}], 1)
+    # single bucket passes straight through
+    passthrough = shape_bucketed_objective(
+        lambda cfgs, b: [float(c["lr"]) for c in cfgs])
+    assert passthrough([{"lr": 0.1, "hidden": 8}, {"lr": 0.2, "hidden": 8}],
+                       1) == [0.1, 0.2]
 
 
 def test_stack_configs():

@@ -61,19 +61,25 @@ def _build_kwargs(name, feats, metadata):
         "craig_pb": dict(grad_fn=_grad_fn, k=K, R=3),
         "gradmatch_pb": dict(grad_fn=_grad_fn, k=K, R=3),
         "glister": dict(grad_fn=_grad_fn, val_grad_fn=_val_grad_fn, k=K, R=3),
+        "milo_hier": dict(features=feats, k=K, partition="random_blocks",
+                          partition_block=32, refine_factor=2),
+        "milo_targeted": dict(features=feats, queries=feats[:8], k=K,
+                              labels=np.arange(N, dtype=np.int64) % CLASSES),
     }[name]
 
 
-def test_registry_covers_all_ten():
+def test_registry_covers_all_selectors():
     assert available_selectors() == sorted([
         "milo", "milo_fixed", "random", "adaptive_random", "el2n",
         "selfsup_prune", "craig_pb", "gradmatch_pb", "glister", "full",
+        "milo_hier", "milo_targeted",
     ])
 
 
 @pytest.mark.parametrize("name", [
     "milo", "milo_fixed", "random", "adaptive_random", "el2n",
     "selfsup_prune", "craig_pb", "gradmatch_pb", "glister", "full",
+    "milo_hier", "milo_targeted",
 ])
 def test_every_selector_builds_and_plans(name, feats, metadata):
     sel = build_selector(name, **_build_kwargs(name, feats, metadata))
