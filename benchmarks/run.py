@@ -19,6 +19,7 @@ module names as argv to run a subset, e.g.
   bench_kernels        — kernel microbenches
   bench_serving        — warm MiloServer vs N cold sessions (concurrent tuning)
   bench_hierarchical   — partition→refine selection at flat-infeasible n
+  bench_multihost      — two-process selection vs single-process (bit-identity)
 """
 from __future__ import annotations
 
@@ -103,6 +104,7 @@ def main(argv: list[str] | None = None) -> None:
         bench_exploration,
         bench_hierarchical,
         bench_kernels,
+        bench_multihost,
         bench_preprocess,
         bench_serving,
         bench_set_functions,
@@ -123,6 +125,7 @@ def main(argv: list[str] | None = None) -> None:
         ("preprocess", bench_preprocess, "selection"),
         ("kernels", bench_kernels, "selection"),
         ("hierarchical", bench_hierarchical, "selection"),
+        ("multihost", bench_multihost, "selection"),
     ]
     if argv:
         known = {name for name, _, _ in modules}

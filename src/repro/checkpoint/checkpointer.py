@@ -31,9 +31,37 @@ Design (1000+-node posture, §5 of DESIGN.md):
     saves cannot over-delete.
 
 On a single-process CPU container every array is fully addressable so there
-is exactly one shard file; the shard-per-host layout and the manifest format
-are what a multi-host deployment needs (each host writes
-``shard_<process_index>.npz`` covering its addressable subset).
+is exactly one shard file; that path is byte-for-byte the pre-multihost
+format-2 protocol.
+
+**Multi-host (two-phase coordinated commit).**  With ``process_count > 1``
+every host participates in one distributed checkpoint per step:
+
+  1. *Rendezvous + staging*: all hosts meet at a named barrier, then the
+     coordinator (process 0) alone resets ``step_<N>.tmp/`` and a second
+     barrier releases the writers — a crashed earlier attempt's stale
+     staging can never mix with this one.
+  2. *Phase 1 — local durability*: every host fsyncs its own
+     ``shard_<i>.npz`` plus a per-host manifest ``host_<i>.json`` carrying
+     its shard checksums (atomic rename, so the coordinator never parses a
+     torn one).
+  3. *Phase 2 — validate + atomic publish*: the coordinator waits for all
+     host manifests (a host that never delivers ⇒ ``HostLossError``),
+     re-hashes every shard against its host's checksum, merges them into
+     ONE global ``manifest.json`` (format 3, ``num_shards =
+     process_count``), fsyncs it, and atomically renames the directory.
+     Non-coordinators block until the publication appears (a coordinator
+     that never publishes ⇒ ``HostLossError``).
+
+  A crash of any host at any instant therefore publishes a complete global
+  checkpoint or nothing: before the rename there is no ``step_<N>/`` at
+  all; after it the manifest provably covers every host's shard.
+  ``latest_valid_step`` validates the global manifest's checksums and shard
+  count, so a step missing (or holding a torn copy of) ANY host's shards is
+  skipped on every host.  GC runs on the coordinator only.  Real
+  multi-process runs coordinate over the jax coordination service
+  (``multihost.RuntimeBarrier``); in-process simulated tests inject a
+  ``multihost.FileBarrier``.
 """
 from __future__ import annotations
 
@@ -49,10 +77,17 @@ from typing import Any
 import jax
 import numpy as np
 
+from repro.distributed.fault_tolerance import HostLossError
+
 _STEP_RE = re.compile(r"^step_(\d+)$")
 
 #: manifest format carrying per-file checksums + extra run metadata
 MANIFEST_FORMAT = 2
+
+#: format 3 = a coordinator-published global manifest merging per-host
+#: shard checksums (two-phase multi-host commit); single-host checkpoints
+#: keep writing format 2 so their manifests are byte-compatible with PR 7
+MULTIHOST_MANIFEST_FORMAT = 3
 
 
 class CheckpointCorruptionError(RuntimeError):
@@ -99,9 +134,36 @@ def _flatten(tree: Any) -> tuple[list[str], list[Any]]:
 
 
 class CheckpointManager:
-    def __init__(self, directory: str, *, keep_last: int = 3):
+    def __init__(
+        self,
+        directory: str,
+        *,
+        keep_last: int = 3,
+        process_index: int | None = None,
+        process_count: int | None = None,
+        barrier: Any | None = None,
+        barrier_timeout: float = 120.0,
+        poll_interval: float = 0.02,
+    ):
+        """``process_index``/``process_count`` default to the jax runtime's
+        (overridable so the two-phase protocol is testable in one process);
+        ``barrier`` is any object with ``wait(name)`` — defaults to the
+        coordination-service barrier when ``jax.distributed`` is live.
+        ``barrier_timeout`` bounds every wait a dead peer could hang:
+        barriers, the coordinator's host-manifest collection, and the
+        non-coordinators' publication poll — each raises ``HostLossError``
+        on expiry."""
         self.directory = directory
         self.keep_last = keep_last
+        self.process_index = (
+            jax.process_index() if process_index is None else int(process_index)
+        )
+        self.process_count = max(
+            1, jax.process_count() if process_count is None else int(process_count)
+        )
+        self.barrier_timeout = float(barrier_timeout)
+        self.poll_interval = float(poll_interval)
+        self._barrier = barrier
         os.makedirs(directory, exist_ok=True)
         self._thread: threading.Thread | None = None
         self._error: BaseException | None = None
@@ -109,6 +171,19 @@ class CheckpointManager:
         # worker and concurrent synchronous saves
         self._lock = threading.Lock()
         self._inflight: set[int] = set()
+
+    def _get_barrier(self) -> Any:
+        if self._barrier is None:
+            from repro.distributed import multihost
+
+            self._barrier = multihost.default_barrier(self.barrier_timeout)
+            if self._barrier is None:
+                raise RuntimeError(
+                    f"process_count={self.process_count} needs a coordination "
+                    "barrier: initialize jax.distributed "
+                    "(multihost.initialize()) or inject barrier= explicitly"
+                )
+        return self._barrier
 
     # -- save ---------------------------------------------------------------
 
@@ -164,14 +239,15 @@ class CheckpointManager:
             raise err
 
     def _write(self, step: int, host_tree: Any, extra: dict | None = None) -> str:
+        if self.process_count > 1:
+            return self._write_multihost(step, host_tree, extra)
         names, leaves = _flatten(host_tree)
         final = os.path.join(self.directory, f"step_{step}")
         tmp = final + ".tmp"
         if os.path.exists(tmp):
             shutil.rmtree(tmp)
         os.makedirs(tmp)
-        shard_id = jax.process_index() if jax.process_count() > 1 else 0
-        shard_name = f"shard_{shard_id}.npz"
+        shard_name = "shard_0.npz"
         shard_path = os.path.join(tmp, shard_name)
         _fsync_write(shard_path, lambda f: np.savez(
             f, **{n: l for n, l in zip(names, leaves)}))
@@ -179,7 +255,7 @@ class CheckpointManager:
             "format": MANIFEST_FORMAT,
             "step": step,
             "time": time.time(),
-            "num_shards": max(1, jax.process_count()),
+            "num_shards": 1,
             "leaves": {n: {"shape": list(np.shape(l)), "dtype": str(np.asarray(l).dtype)}
                        for n, l in zip(names, leaves)},
             # checksums cover every data file; the manifest itself is the
@@ -189,6 +265,12 @@ class CheckpointManager:
         }
         _fsync_write(os.path.join(tmp, "manifest.json"),
                      lambda f: f.write(json.dumps(manifest).encode()))
+        self._publish(tmp, final)
+        self._gc()
+        return final
+
+    def _publish(self, tmp: str, final: str) -> None:
+        """Atomically rename the staging dir into place, durably."""
         if os.path.exists(final):
             shutil.rmtree(final)
         os.replace(tmp, final)
@@ -198,8 +280,129 @@ class CheckpointManager:
             os.fsync(dirfd)
         finally:
             os.close(dirfd)
-        self._gc()
+
+    # -- multi-host two-phase commit ----------------------------------------
+
+    def _write_multihost(self, step: int, host_tree: Any,
+                         extra: dict | None = None) -> str:
+        names, leaves = _flatten(host_tree)
+        final = os.path.join(self.directory, f"step_{step}")
+        tmp = final + ".tmp"
+        bar = self._get_barrier()
+        coordinator = self.process_index == 0
+        # rendezvous BEFORE touching the staging dir: once every host is
+        # here, nobody can still be writing into a previous attempt's tmp,
+        # so the coordinator's reset cannot race a live writer
+        bar.wait(f"ckpt_{step}_enter")
+        if coordinator:
+            if os.path.exists(tmp):
+                shutil.rmtree(tmp)
+            os.makedirs(tmp)
+        bar.wait(f"ckpt_{step}_staged")
+        # phase 1: every host fsyncs its own shard + checksummed host
+        # manifest (atomic rename — the coordinator never parses a torn one)
+        shard_name = f"shard_{self.process_index}.npz"
+        shard_path = os.path.join(tmp, shard_name)
+        _fsync_write(shard_path, lambda f: np.savez(
+            f, **{n: l for n, l in zip(names, leaves)}))
+        host_manifest = {
+            "process_index": self.process_index,
+            "checksums": {shard_name: _sha256_file(shard_path)},
+            "leaves": {n: {"shape": list(np.shape(l)),
+                           "dtype": str(np.asarray(l).dtype)}
+                       for n, l in zip(names, leaves)},
+        }
+        hm_final = os.path.join(tmp, f"host_{self.process_index}.json")
+        _fsync_write(hm_final + ".tmp",
+                     lambda f: f.write(json.dumps(host_manifest).encode()))
+        os.replace(hm_final + ".tmp", hm_final)
+        if not coordinator:
+            # phase 2 (follower): wait for the coordinator's publication —
+            # its absence past the deadline means the coordinator died
+            self._await_publication(final, step)
+            return final
+        # phase 2 (coordinator): collect every host's manifest, re-hash
+        # every shard against its host's checksum, publish ONE global
+        # manifest — so the rename only ever exposes a complete checkpoint
+        host_manifests = self._collect_host_manifests(tmp)
+        checksums: dict[str, str] = {}
+        leaves_meta: dict[str, Any] = {}
+        for hm in host_manifests:
+            for fn, want in hm["checksums"].items():
+                got = _sha256_file(os.path.join(tmp, fn))
+                if got != want:
+                    raise CheckpointCorruptionError(
+                        f"{tmp}: host {hm['process_index']} shard {fn} "
+                        f"checksum mismatch before publish "
+                        f"(host manifest {want[:12]}…, file {got[:12]}…)"
+                    )
+                checksums[fn] = want
+            leaves_meta.update(hm["leaves"])
+        manifest = {
+            "format": MULTIHOST_MANIFEST_FORMAT,
+            "step": step,
+            "time": time.time(),
+            "num_shards": self.process_count,
+            "hosts": sorted(hm["process_index"] for hm in host_manifests),
+            "leaves": leaves_meta,
+            "checksums": checksums,
+            "extra": dict(extra) if extra else {},
+        }
+        _fsync_write(os.path.join(tmp, "manifest.json"),
+                     lambda f: f.write(json.dumps(manifest).encode()))
+        self._publish(tmp, final)
+        self._gc()  # coordinator-only: followers never delete checkpoints
         return final
+
+    def _collect_host_manifests(self, tmp: str) -> list[dict]:
+        """Coordinator: poll until every host's manifest exists and parses.
+
+        A host that never delivers within ``barrier_timeout`` is presumed
+        dead — ``HostLossError`` names it, nothing is published, and the
+        previous checkpoint remains the newest valid step everywhere.
+        """
+        deadline = time.monotonic() + self.barrier_timeout
+        want = set(range(self.process_count))
+        have: dict[int, dict] = {}
+        while True:
+            for i in sorted(want - set(have)):
+                path = os.path.join(tmp, f"host_{i}.json")
+                try:
+                    with open(path) as f:
+                        have[i] = json.load(f)
+                except (FileNotFoundError, json.JSONDecodeError, OSError):
+                    continue
+            if set(have) == want:
+                return [have[i] for i in sorted(have)]
+            if time.monotonic() > deadline:
+                missing = sorted(want - set(have))
+                raise HostLossError(
+                    f"distributed checkpoint: host manifest(s) from "
+                    f"{missing} never arrived within {self.barrier_timeout}s "
+                    "— publishing nothing",
+                    hosts=missing,
+                )
+            time.sleep(self.poll_interval)
+
+    def _await_publication(self, final: str, step: int) -> None:
+        """Follower: block until the coordinator's atomic publish appears."""
+        deadline = time.monotonic() + self.barrier_timeout
+        while True:
+            try:
+                with open(os.path.join(final, "manifest.json")) as f:
+                    if int(json.load(f).get("step", -1)) == step:
+                        return
+            except (FileNotFoundError, NotADirectoryError,
+                    json.JSONDecodeError, OSError):
+                pass
+            if time.monotonic() > deadline:
+                raise HostLossError(
+                    f"distributed checkpoint step {step}: coordinator never "
+                    f"published within {self.barrier_timeout}s — presumed "
+                    "dead",
+                    hosts=[0],
+                )
+            time.sleep(self.poll_interval)
 
     def _gc(self) -> None:
         if not self.keep_last:

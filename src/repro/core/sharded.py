@@ -61,6 +61,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
@@ -82,6 +83,9 @@ from repro.core.greedy import (
     stochastic_greedy,
 )
 from repro.core.submodular import LazyHooks, SetFunction, State
+from repro.distributed import compression as comp_mod
+from repro.distributed import multihost
+from repro.distributed.compression import CompressionIntegrityError
 from repro.distributed.sharding import SELECTION_AXIS as AXIS
 
 
@@ -126,6 +130,71 @@ def _slice_mine(vec: jax.Array, z_local: jax.Array, axis: str) -> jax.Array:
     )
 
 
+def _compressed_psum(x: jax.Array, axis: str, *, rounds: int) -> jax.Array:
+    """Error-feedback compressed cross-shard sum with integrity checksums.
+
+    Each round every shard int8-quantizes its residual (round 0: its full
+    partial), all-gathers the checksummed payloads, verifies every peer's
+    checksum post-collective, and accumulates the decoded sum; the local
+    quantization error feeds the next round.  ``rounds`` trades payload for
+    fidelity — one round moves n bytes/shard instead of the exact psum's 4n,
+    and the residual shrinks geometrically with each extra round.
+
+    A checksum mismatch — a corrupted collective — NaN-poisons the entire
+    output in-trace; the wrapper-level host check then raises
+    ``CompressionIntegrityError`` instead of letting a silently-skewed gain
+    pick subsets.  The escape hatch is not calling this at all
+    (``compress=None``), which keeps the exact ``psum`` path bit-identical.
+    """
+    total = jnp.zeros_like(x, jnp.float32)
+    resid = x.astype(jnp.float32)
+    for _ in range(rounds):
+        p = comp_mod.int8_compress_checked(resid)
+        qs = jax.lax.all_gather(p.q, axis)            # (n_shards, n)
+        scales = jax.lax.all_gather(p.scale, axis)    # (n_shards,)
+        sums = jax.lax.all_gather(p.checksum, axis)   # (n_shards,)
+        ok = jnp.all(jax.vmap(comp_mod.payload_checksum)(qs) == sums)
+        decoded = jnp.sum(qs.astype(jnp.float32) * scales[:, None], axis=0)
+        total = total + jnp.where(ok, decoded, jnp.nan)
+        resid = resid - comp_mod.int8_decompress(
+            comp_mod.Int8Compressed(p.q, p.scale))
+    return total
+
+
+def _raise_if_corrupt(fn: SetFunction, gains_arr: jax.Array) -> None:
+    """Loud failure for the compressed path: a checksum mismatch inside the
+    collective NaN-poisons the traced gains; surface it as an exception the
+    moment the result reaches the host (the arrays are replicated outputs,
+    so this reads no extra device memory)."""
+    if "_c8" not in fn.name:
+        return
+    if np.isnan(np.asarray(gains_arr)).any():
+        raise CompressionIntegrityError(
+            f"{fn.name}: NaN in selection gains — a compressed cross-shard "
+            "collective failed its payload checksum (corrupted transfer); "
+            "rerun, or disable compression (compress=None) to use the "
+            "exact psum path"
+        )
+
+
+def _place_global(mesh: Mesh, axis: str, z, valid, key=None):
+    """Lay inputs out on the mesh when it spans processes.
+
+    Single-process meshes take the unchanged direct-call path (byte-identical
+    dispatch to the pre-multihost code); multi-process meshes need inputs
+    committed to the global sharding before the jitted shard_map program can
+    accept them — each host fills its addressable shards from its own full
+    host copy, so placement moves no bytes between hosts.
+    """
+    if not multihost.mesh_spans_processes(mesh):
+        return (z, valid) if key is None else (z, valid, key)
+    zg = multihost.global_put(jnp.asarray(z), mesh, P(axis, None))
+    vg = multihost.global_put(jnp.asarray(valid), mesh, P(None))
+    if key is None:
+        return zg, vg
+    return zg, vg, multihost.global_put(jnp.asarray(key), mesh, P(None))
+
+
 def _gathered_z_evaluate(base_evaluate):
     """Tests-only ``evaluate``: rebuild full z (all_gather) and delegate."""
 
@@ -149,10 +218,21 @@ def make_sharded_facility_location(
     interpret: bool = False,
     block_i: int = 512,
     block_j: int = 512,
+    compress: str | None = None,
+    compress_rounds: int = 2,
 ) -> SetFunction:
     """Facility location with the cover vector replicated and all gain
     reductions computed per shard through ``fl_gains_gram_free``; exposes
-    ``lazy`` hooks so ``lazy_greedy`` composes with the mesh."""
+    ``lazy`` hooks so ``lazy_greedy`` composes with the mesh.
+
+    ``compress="int8"`` routes the full-gains ring's O(n) cross-shard
+    reduction through ``_compressed_psum`` — error-feedback int8 payloads
+    with integrity checksums, ``compress_rounds`` controlling the
+    payload/fidelity trade — for meshes whose shards sit across a slow
+    inter-host link.  The exact one-owner gathers (``gains_at``, ``update``,
+    lazy deltas) are never compressed: they are the bit-exactness-critical
+    small payloads.  ``compress=None`` (default) is the escape hatch: the
+    exact ``psum`` code path, bit-identical to every prior release."""
     from repro.kernels.fl_gains import ops as fl_ops
 
     base = make_gram_free_facility_location(
@@ -193,6 +273,8 @@ def make_sharded_facility_location(
                 out, _kernel(z_local, blk, c_loc),
                 (((me + t) % n_shards) * chunk,),
             )
+        if compress == "int8":
+            return _compressed_psum(out, axis, rounds=compress_rounds)
         return jax.lax.psum(out, axis)
 
     def gains_at(c: State, z_local: jax.Array, cand: jax.Array) -> jax.Array:
@@ -218,6 +300,11 @@ def make_sharded_facility_location(
         return jax.lax.all_gather(d_loc, axis, tiled=True)
 
     name = "sharded_facility_location" + ("_pallas" if use_pallas else "")
+    if compress == "int8":
+        name += f"_c8r{compress_rounds}"
+    elif compress is not None:
+        raise ValueError(f"unknown compression scheme {compress!r}; "
+                         "one of ('int8', None)")
     return SetFunction(name, init, gains, update,
                        _gathered_z_evaluate(base.evaluate), gains_at=gains_at,
                        lazy=LazyHooks(cover=lambda c: c,
@@ -415,7 +502,10 @@ def sharded_greedy(
     """``greedy`` with z row-sharded over ``mesh`` (trajectory-identical)."""
     n = _check_shardable(z, mesh, axis)
     run = _compiled("greedy", fn, mesh, axis, n, k)
-    return GreedyResult(*run(z, _valid_or_all(n, valid)))
+    z, v = _place_global(mesh, axis, z, _valid_or_all(n, valid))
+    res = GreedyResult(*run(z, v))
+    _raise_if_corrupt(fn, res.gains)
+    return res
 
 
 def sharded_lazy_greedy(
@@ -444,7 +534,10 @@ def sharded_lazy_greedy(
     on calm steps."""
     n = _check_shardable(z, mesh, axis)
     run = _compiled("lazy", fn, mesh, axis, n, k, budget, two_level)
-    return LazyGreedyResult(*run(z, _valid_or_all(n, valid)))
+    z, v = _place_global(mesh, axis, z, _valid_or_all(n, valid))
+    res = LazyGreedyResult(*run(z, v))
+    _raise_if_corrupt(fn, res.gains)
+    return res
 
 
 def sharded_refine(
@@ -466,7 +559,10 @@ def sharded_refine(
         lazy_budget = None
     run = _compiled("refine", fn, mesh, axis, n, k, lazy_budget,
                     lazy_two_level)
-    return GreedyResult(*run(z, _valid_or_all(n, valid)))
+    z, v = _place_global(mesh, axis, z, _valid_or_all(n, valid))
+    res = GreedyResult(*run(z, v))
+    _raise_if_corrupt(fn, res.gains)
+    return res
 
 
 def sharded_stochastic_greedy(
@@ -478,7 +574,10 @@ def sharded_stochastic_greedy(
     bit-identical to the single-device run."""
     n = _check_shardable(z, mesh, axis)
     run = _compiled("stochastic", fn, mesh, axis, n, k, s)
-    return GreedyResult(*run(z, _valid_or_all(n, valid), key))
+    z, v, key = _place_global(mesh, axis, z, _valid_or_all(n, valid), key)
+    res = GreedyResult(*run(z, v, key))
+    _raise_if_corrupt(fn, res.gains)
+    return res
 
 
 def sharded_sge(
@@ -492,7 +591,8 @@ def sharded_sge(
     if s is None:
         s = stochastic_candidate_count(n, k, eps)
     run = _compiled("bank", fn, mesh, axis, n, k, s, n_subsets)
-    return run(z, _valid_or_all(n, valid), key)
+    z, v, key = _place_global(mesh, axis, z, _valid_or_all(n, valid), key)
+    return run(z, v, key)
 
 
 def sharded_greedy_importance(
@@ -511,4 +611,7 @@ def sharded_greedy_importance(
     n = _check_shardable(z, mesh, axis)
     run = _compiled("importance", fn, mesh, axis, n, lazy_budget,
                     lazy_two_level)
-    return run(z, _valid_or_all(n, valid))
+    z, v = _place_global(mesh, axis, z, _valid_or_all(n, valid))
+    out = run(z, v)
+    _raise_if_corrupt(fn, out)
+    return out

@@ -9,6 +9,17 @@ the optimizer ([Seide'14, Karimireddy'19]):
 The trainer applies compression only to the cross-pod all-reduce: grads are
 reduce-scattered at full precision inside a pod (fast ICI), compressed for
 the pod axis, decompressed, and applied.  All ops are jit-compatible.
+
+``CheckedPayload`` adds an integrity layer for payloads that actually cross
+a wire: the int8 tensor carries a position-weighted int32 checksum computed
+*before* the collective and re-verified *after* it, so a corrupted transfer
+(bit flips, torn buffers) is detected instead of silently skewing every
+gain downstream.  Inside a trace the mismatch poisons the decompressed
+value with NaN (``decompress_checked``); on the host,
+``check_payload`` raises ``CompressionIntegrityError``.  The sharded
+selection engines (``core.sharded``) use this for their cross-host ring
+psums — with an exactness escape hatch (``compress=None``) that leaves the
+collective bit-identical to the uncompressed path.
 """
 from __future__ import annotations
 
@@ -52,6 +63,66 @@ def topk_decompress(vals: jax.Array, idx: jax.Array, shape, dtype=jnp.float32) -
         n *= s
     out = jnp.zeros((n,), jnp.float32).at[idx].set(vals)
     return out.reshape(shape).astype(dtype)
+
+
+class CompressionIntegrityError(RuntimeError):
+    """A compressed payload's checksum disagrees with its contents — the
+    collective (or storage) corrupted it in flight."""
+
+
+class CheckedPayload(NamedTuple):
+    q: jax.Array         # int8 payload
+    scale: jax.Array     # per-tensor scale ()
+    checksum: jax.Array  # () int32 position-weighted fold of ``q``
+
+
+# odd multiplier (Knuth) so equal-magnitude flips at different positions
+# cannot cancel; int32 arithmetic wraps, which is exactly what we want
+_CHECKSUM_MULT = 2654435761 & 0x7FFFFFFF
+
+
+def payload_checksum(q: jax.Array) -> jax.Array:
+    """Deterministic int32 checksum of an int8 payload (jit-compatible).
+
+    Position-weighted so both value flips and transpositions change the
+    fold; pure integer math, so the pre-send and post-receive computations
+    are bit-identical on every backend.
+    """
+    flat = q.reshape(-1).astype(jnp.int32)
+    weights = (jnp.arange(flat.shape[0], dtype=jnp.int32) * _CHECKSUM_MULT) | 1
+    return jnp.sum(flat * weights, dtype=jnp.int32)
+
+
+def int8_compress_checked(x: jax.Array, key: jax.Array | None = None) -> CheckedPayload:
+    """``int8_compress`` plus the integrity checksum, stamped pre-send."""
+    c = int8_compress(x, key)
+    return CheckedPayload(c.q, c.scale, payload_checksum(c.q))
+
+
+def payload_ok(p: CheckedPayload) -> jax.Array:
+    """Traced bool: does the payload still match its checksum?"""
+    return payload_checksum(p.q) == p.checksum
+
+
+def decompress_checked(p: CheckedPayload, dtype=jnp.float32) -> jax.Array:
+    """Decompress with in-trace integrity enforcement.
+
+    On checksum mismatch every element becomes NaN — corruption cannot skew
+    results by a plausible-looking epsilon; it wrecks them visibly, and the
+    host-side consumer (``core.sharded``'s wrappers, the health guard)
+    raises on the non-finite output.
+    """
+    val = int8_decompress(Int8Compressed(p.q, p.scale), dtype)
+    return jnp.where(payload_ok(p), val, jnp.full_like(val, jnp.nan))
+
+
+def check_payload(p: CheckedPayload) -> None:
+    """Host-side (eager) integrity check; raises ``CompressionIntegrityError``."""
+    if not bool(payload_ok(p)):
+        raise CompressionIntegrityError(
+            "compressed payload failed its integrity checksum "
+            f"(stored {int(p.checksum)}, recomputed {int(payload_checksum(p.q))})"
+        )
 
 
 class ErrorFeedbackState(NamedTuple):

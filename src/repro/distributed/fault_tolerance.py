@@ -18,6 +18,23 @@ import dataclasses
 import time
 
 
+class HostLossError(RuntimeError):
+    """A peer host is dead or unreachable (missed heartbeats, an unreached
+    coordination barrier, or a host manifest that never arrived during a
+    two-phase distributed checkpoint).
+
+    ``hosts`` names the processes believed lost when known.  The recovery
+    contract: the launcher restarts with the surviving host count,
+    ``elastic_plan`` re-meshes deterministically, and the run resumes from
+    the last *globally*-valid checkpoint (``latest_valid_step`` skips any
+    step missing a host's shards).
+    """
+
+    def __init__(self, message: str, *, hosts: tuple[int, ...] | list[int] = ()):
+        super().__init__(message)
+        self.hosts = tuple(int(h) for h in hosts)
+
+
 @dataclasses.dataclass
 class StragglerMonitor:
     """EWMA step-time tracker; flags steps slower than mean + z * std."""

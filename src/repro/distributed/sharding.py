@@ -149,8 +149,21 @@ def selection_mesh(n_devices: int | None = None, *, axis: str = SELECTION_AXIS) 
     single device's memory; everything else they carry is O(n) and stays
     replicated.  ``n_devices`` truncates to a prefix of ``jax.devices()``
     (useful to keep the shard count a divisor of the padded class sizes);
-    the default uses every local device.  On CPU, force a multi-device mesh
+    the default uses every device.  On CPU, force a multi-device mesh
     with ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+
+    **Multi-host:** ``jax.devices()`` is the *global* device list, so after
+    ``distributed.multihost.initialize()`` this mesh spans every process and
+    the same ``shard_map`` programs run their ring ``ppermute``/``psum``
+    across hosts — no engine changes.  The engine wrappers detect a
+    process-spanning mesh (``multihost.mesh_spans_processes``) and commit
+    inputs to the global sharding via ``multihost.global_put`` (each host
+    fills its addressable shards from its own replicated host copy); the
+    replicated ``out_specs=P(None)`` results are host-readable on every
+    process.  A 2-process × 1-device mesh compiles the same logical program
+    as a 1-process × 2-device mesh, which is what makes the two runs'
+    selection trajectories bit-identical (the multihost test suite pins
+    this).
     """
     devs = jax.devices()
     if n_devices is not None:

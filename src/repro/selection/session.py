@@ -30,6 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.metadata import MetadataMismatchError, MiloMetadata, is_preprocessed
+from repro.distributed import multihost
 from repro.core.milo import MiloPreprocessor
 from repro.data import pipeline as pipeline_mod
 from repro.models.classifier import accuracy, init_mlp, nesterov_update, weighted_nll
@@ -142,6 +143,22 @@ class MiloSessionConfig:
     eval_every_epochs: int = 1
     # artifact persistence (enables cross-session / cross-model reuse)
     metadata_path: str | None = None
+    # -- multi-host execution (distributed.multihost) -----------------------
+    # initialize jax.distributed at session construction from the
+    # MILO_COORDINATOR / MILO_NUM_PROCESSES / MILO_PROCESS_ID env triplet
+    # (idempotent; a no-op when the env does not describe a multi-process
+    # job).  After initialization jax.devices() is global, so
+    # shard_selection's `sel` mesh — and every collective in core.sharded —
+    # spans all hosts with no further knobs; trajectories are bit-identical
+    # to a single process exposing the same logical device count.
+    multihost_init: bool = False
+    # host-liveness beacons for train(): every step boundary writes this
+    # host's heartbeat and checks its peers'; a peer stale past the timeout
+    # raises HostLossError so the launcher can re-mesh and resume from the
+    # last globally-valid checkpoint.  The directory must be shared across
+    # the job's hosts.  None = liveness off (single-process default).
+    heartbeat_dir: str | None = None
+    heartbeat_timeout: float = 60.0
 
     def preprocessor(self) -> MiloPreprocessor:
         return MiloPreprocessor(
@@ -260,6 +277,8 @@ class MiloSession:
             config = MiloSessionConfig(**overrides)
         elif overrides:
             config = dataclasses.replace(config, **overrides)
+        if config.multihost_init:
+            multihost.initialize()
         self.config = config
         self.metadata: MiloMetadata | None = None
         self.loaded_from_artifact = False
@@ -718,6 +737,8 @@ class MiloSession:
             TrainerConfig(
                 epochs=epochs, eval_every_epochs=cfg.eval_every_epochs,
                 log_every_steps=1,
+                heartbeat_dir=cfg.heartbeat_dir,
+                heartbeat_timeout=cfg.heartbeat_timeout,
             ),
             eval_fn=eval_fn,
             fused=cfg.fused_training,

@@ -52,6 +52,7 @@ from typing import Any, Callable
 import numpy as np
 
 from repro.core.metadata import MiloMetadata, config_hash
+from repro.distributed.multihost import HeartbeatMonitor
 from repro.health.breaker import CircuitBreaker, CircuitOpenError
 from repro.selection.session import (
     MiloSession,
@@ -238,6 +239,9 @@ class MiloServer:
         retry_policy: RetryPolicy | None = None,
         max_queue: int = 256,
         breaker: CircuitBreaker | None = None,
+        heartbeat_dir: str | None = None,
+        heartbeat_timeout: float = 60.0,
+        heartbeat_monitor: Any | None = None,
         **config_overrides: Any,
     ):
         cfg = config if config is not None else MiloSessionConfig()
@@ -259,6 +263,17 @@ class MiloServer:
         # `threshold` consecutive failures (fast CircuitOpenError instead),
         # while cached artifacts for that key keep serving
         self.breaker = breaker if breaker is not None else CircuitBreaker()
+        # host liveness (multi-host deployments): health() folds per-host
+        # heartbeat ages into its verdict — any stale peer ⇒ "degraded".
+        # Pass heartbeat_monitor directly for a custom clock/expected-set;
+        # otherwise heartbeat_dir builds one over the shared beacon dir.
+        if heartbeat_monitor is not None:
+            self.liveness: HeartbeatMonitor | None = heartbeat_monitor
+        elif heartbeat_dir is not None:
+            self.liveness = HeartbeatMonitor(
+                heartbeat_dir, timeout=heartbeat_timeout)
+        else:
+            self.liveness = None
         self._queued = 0          # admission-controlled queue depth
         self._retries = 0         # transient failures that were retried
         self._failures = 0        # requests that terminated in ERROR
@@ -413,9 +428,11 @@ class MiloServer:
 
         ``status`` is ``"ok"`` when the server is accepting work with every
         circuit closed, ``"degraded"`` when any artifact key's breaker is
-        open/half-open or the queue is at capacity, and ``"stopped"`` after
-        shutdown.  The rest is the evidence: queue depth vs. limit, the
-        per-key breaker snapshot, store/retry/failure counters.
+        open/half-open, the queue is at capacity, or (when a heartbeat
+        monitor is attached) any expected host's beacon is stale, and
+        ``"stopped"`` after shutdown.  The rest is the evidence: queue
+        depth vs. limit, the per-key breaker snapshot, per-host heartbeat
+        ages, store/retry/failure counters.
         """
         with self._lock:
             started = self._started
@@ -424,13 +441,15 @@ class MiloServer:
         breakers = self.breaker.snapshot()
         tripped = sorted(
             k for k, st in breakers.items() if st["state"] != "closed")
+        hosts = self.liveness.snapshot() if self.liveness is not None else None
+        stale_hosts = hosts["stale"] if hosts is not None else []
         if not started:
             status = "stopped"
-        elif tripped or queued >= self.max_queue:
+        elif tripped or stale_hosts or queued >= self.max_queue:
             status = "degraded"
         else:
             status = "ok"
-        return {
+        out = {
             "status": status,
             "queue": {"depth": queued, "limit": self.max_queue},
             "breakers": breakers,
@@ -439,6 +458,9 @@ class MiloServer:
             "failures": failures,
             "store": self.store.stats(),
         }
+        if hosts is not None:
+            out["hosts"] = hosts
+        return out
 
     # -- warm pool ----------------------------------------------------------
 

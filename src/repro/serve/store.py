@@ -17,6 +17,20 @@ file path convention:
     rebuilds — so one bad build can never wedge a key.  ``builds`` /
     ``build_failures`` / ``hits`` / ``disk_loads`` counters make both
     claims testable.
+  * **Cross-process single-flight** — with a disk root, the build section
+    is additionally guarded by an ``O_EXCL`` lockfile next to the artifact
+    (``<artifact>.npz.lock`` recording the holder's PID), so N *processes*
+    sharing one store root (the multi-host deployment shape) also build a
+    key exactly once: the losers poll, and the moment the winner's atomic
+    rename lands they load the finished artifact from disk.  A lockfile
+    whose recorded PID is dead is taken over — the taker renames it to a
+    tombstone (exactly one racing taker wins the ``rename``) and retries —
+    so a SIGKILLed builder can never wedge the key for its peers.  A
+    stuck-but-ALIVE holder only stalls waiters until ``lock_timeout``,
+    after which they build redundantly rather than hang (the artifact
+    write is an atomic rename, so the race costs duplicate work, never a
+    torn file).  ``lock_waits`` / ``lock_steals`` / ``lock_timeouts``
+    counters expose each path.
   * **Two tiers** — an in-memory LRU of decoded ``MiloMetadata`` objects in
     front of an optional on-disk root (one ``.npz`` per key, written through
     ``MiloMetadata.save``'s atomic temp-file rename).  Evicting a memory
@@ -39,6 +53,7 @@ import collections
 import dataclasses
 import os
 import threading
+import time
 from typing import Any, Callable
 
 from repro.core.metadata import (
@@ -49,6 +64,19 @@ from repro.core.metadata import (
 
 #: (data_fingerprint, config_hash)
 ArtifactKey = tuple[str, str]
+
+
+def _pid_alive(pid: int) -> bool:
+    """Whether ``pid`` names a live process (signal-0 probe)."""
+    if pid <= 0:
+        return False
+    try:
+        os.kill(pid, 0)
+    except ProcessLookupError:
+        return False
+    except PermissionError:
+        return True  # exists, owned by someone else
+    return True
 
 
 @dataclasses.dataclass
@@ -65,11 +93,27 @@ class ArtifactEntry:
 class ArtifactStore:
     """In-memory LRU + on-disk artifact store with single-flight builds."""
 
-    def __init__(self, root: str | None = None, *, capacity: int = 8):
+    def __init__(
+        self,
+        root: str | None = None,
+        *,
+        capacity: int = 8,
+        lock_timeout: float = 300.0,
+        lock_poll: float = 0.05,
+        clock: Callable[[], float] = time.monotonic,
+        sleep: Callable[[float], None] = time.sleep,
+    ):
         if capacity < 1:
             raise ValueError(f"capacity must be >= 1, got {capacity}")
         self.root = root
         self.capacity = capacity
+        # cross-process lockfile knobs (root-backed stores only); clock and
+        # sleep are injectable so the timeout paths are testable without
+        # real waiting
+        self.lock_timeout = lock_timeout
+        self.lock_poll = lock_poll
+        self._clock = clock
+        self._sleep = sleep
         self._lock = threading.RLock()
         # insertion order == recency order (move_to_end on every touch)
         self._memory: collections.OrderedDict[ArtifactKey, MiloMetadata] = (
@@ -85,6 +129,9 @@ class ArtifactStore:
         self.hits = 0
         self.disk_loads = 0
         self.evictions = 0
+        self.lock_waits = 0
+        self.lock_steals = 0
+        self.lock_timeouts = 0
         if root:
             os.makedirs(root, exist_ok=True)
 
@@ -150,35 +197,138 @@ class ArtifactStore:
                     if pin:
                         loaded[1].pinned = True
                     return (*loaded, "disk")
-            try:
-                md = build_fn()
-            except BaseException:
-                # a failed build must not poison the key: count it, let the
-                # ``with flight:`` release the per-key lock on unwind, and
-                # leave no partial entry behind.  Each waiter blocked on the
-                # flight lock then resolves the key itself (cache miss →
-                # its own build attempt) instead of hanging forever on a
-                # lock the dead builder never released.
-                with self._lock:
-                    self.build_failures += 1
-                    self._key_failures[key] = self._key_failures.get(key, 0) + 1
-                raise
-            with self._lock:
-                self.builds += 1
-                self._key_failures.pop(key, None)
-                entry = self._entries.get(key)
-                if entry is None:
-                    entry = ArtifactEntry(key=key, version=1,
-                                          path=self.path_for(key))
-                    self._entries[key] = entry
-                else:
-                    entry.version += 1
-                entry.pinned = entry.pinned or pin
             path = self.path_for(key)
-            if path is not None:
-                md.save(path)
+            lock_path = None
+            if path is not None and not force:
+                # cross-process single-flight: win the O_EXCL lockfile or
+                # wait for the winning process's artifact to land on disk
+                lock_path, loaded = self._acquire_build_lock(
+                    key, path, expected_config
+                )
+                if loaded is not None:
+                    if pin:
+                        loaded[1].pinned = True
+                    return (*loaded, "disk")
+            try:
+                try:
+                    md = build_fn()
+                except BaseException:
+                    # a failed build must not poison the key: count it, let
+                    # the ``with flight:`` release the per-key lock on
+                    # unwind, and leave no partial entry behind.  Each
+                    # waiter blocked on the flight lock then resolves the
+                    # key itself (cache miss → its own build attempt)
+                    # instead of hanging forever on a lock the dead builder
+                    # never released.
+                    with self._lock:
+                        self.build_failures += 1
+                        self._key_failures[key] = (
+                            self._key_failures.get(key, 0) + 1
+                        )
+                    raise
+                with self._lock:
+                    self.builds += 1
+                    self._key_failures.pop(key, None)
+                    entry = self._entries.get(key)
+                    if entry is None:
+                        entry = ArtifactEntry(key=key, version=1,
+                                              path=self.path_for(key))
+                        self._entries[key] = entry
+                    else:
+                        entry.version += 1
+                    entry.pinned = entry.pinned or pin
+                if path is not None:
+                    md.save(path)
+            finally:
+                # released AFTER the atomic save, so a waiter that sees the
+                # lock vanish also sees the finished artifact
+                if lock_path is not None:
+                    self._release_build_lock(lock_path)
             self._install(key, md)
             return md, self._entries[key], "built"
+
+    # -- cross-process lockfile ---------------------------------------------
+
+    def _acquire_build_lock(
+        self, key: ArtifactKey, path: str, expected_config: dict[str, Any]
+    ) -> tuple[str | None, tuple[MiloMetadata, ArtifactEntry] | None]:
+        """Win the key's cross-process build lock, or load the peer's result.
+
+        Returns ``(lock_path, None)`` once this process owns the lockfile
+        (build may proceed; the caller must ``_release_build_lock``), or
+        ``(None, (md, entry))`` when another process finished the build
+        first and its artifact was loaded from disk.  On ``lock_timeout``
+        returns ``(None, None)``: the caller builds WITHOUT the lock —
+        ``MiloMetadata.save`` is an atomic rename, so a stuck-but-alive
+        holder costs duplicated work, never a torn artifact.
+        """
+        lock_path = path + ".lock"
+        deadline = self._clock() + self.lock_timeout
+        waited = False
+        while True:
+            if self._try_lock(lock_path):
+                return lock_path, None
+            if not waited:
+                waited = True
+                with self._lock:
+                    self.lock_waits += 1
+            if os.path.exists(path):
+                loaded = self._disk_load(key, expected_config)
+                if loaded is not None:
+                    return None, loaded
+            if self._clock() >= deadline:
+                with self._lock:
+                    self.lock_timeouts += 1
+                return None, None
+            self._sleep(self.lock_poll)
+
+    def _try_lock(self, lock_path: str) -> bool:
+        """One O_EXCL attempt; reaps a dead holder's lock as a side effect."""
+        try:
+            fd = os.open(lock_path, os.O_CREAT | os.O_EXCL | os.O_WRONLY)
+        except FileExistsError:
+            self._reap_stale_lock(lock_path)
+            return False
+        try:
+            os.write(fd, str(os.getpid()).encode("ascii"))
+        finally:
+            os.close(fd)
+        return True
+
+    def _reap_stale_lock(self, lock_path: str) -> None:
+        """Remove ``lock_path`` if its recorded holder PID is dead.
+
+        The takeover is race-free: every contender renames the lock to its
+        OWN tombstone name first, and ``os.rename`` lets exactly one win;
+        the losers' renames fail and they simply retry the O_EXCL open
+        (now against the new holder's lock).
+        """
+        try:
+            with open(lock_path, encoding="ascii") as f:
+                pid = int(f.read().strip())
+        except (OSError, ValueError):
+            # vanished under us, or the holder hasn't recorded its PID yet
+            # (microsecond window after its O_EXCL open): treat as live
+            return
+        if _pid_alive(pid):
+            return
+        tombstone = f"{lock_path}.stale.{os.getpid()}"
+        try:
+            os.rename(lock_path, tombstone)
+        except OSError:
+            return  # a racing reaper won the rename
+        try:
+            os.unlink(tombstone)
+        except OSError:
+            pass
+        with self._lock:
+            self.lock_steals += 1
+
+    def _release_build_lock(self, lock_path: str) -> None:
+        try:
+            os.unlink(lock_path)
+        except OSError:
+            pass
 
     def _flight(self, key: ArtifactKey) -> threading.Lock:
         with self._lock:
@@ -267,6 +417,9 @@ class ArtifactStore:
                 "hits": self.hits,
                 "disk_loads": self.disk_loads,
                 "evictions": self.evictions,
+                "lock_waits": self.lock_waits,
+                "lock_steals": self.lock_steals,
+                "lock_timeouts": self.lock_timeouts,
                 "resident": len(self._memory),
                 "known": len(self._entries),
             }

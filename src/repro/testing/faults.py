@@ -14,6 +14,16 @@ survive):
     lands at the first step/segment boundary >= N, i.e. mid-epoch for any N
     that is not a multiple of the epoch length).  The process dies without
     unwinding — exactly what preemption looks like to the checkpoint layer.
+  * ``KillHost``        — the multi-host variant: SIGKILL only when this
+    process's ``jax.process_index()`` matches, so one host of a
+    ``launch_hosts`` job dies at an exact step boundary while its peers run
+    on into dead-host detection (heartbeat timeout / checkpoint-barrier
+    timeout → ``HostLossError``).
+  * ``launch_hosts``    — the multi-process harness itself: picks a free
+    coordinator port, spawns N copies of a ``python -c`` script with the
+    ``MILO_COORDINATOR``/``MILO_NUM_PROCESSES``/``MILO_PROCESS_ID`` env
+    triplet ``multihost.initialize()`` reads, and collects per-process
+    (returncode, stdout, stderr).
   * ``flaky`` / ``fail_nth_calls`` — scripted exceptions from any callable
     (artifact builds, objectives): fail the first K calls, or an explicit
     set of call numbers, then delegate.  Used to prove single-flight lock
@@ -84,6 +94,105 @@ class KillAtStep(StragglerMonitor):
         if step >= self.kill_step:
             kill_process()
         return super().observe(step, dt)
+
+
+class KillHost(KillAtStep):
+    """SIGKILL one specific host of a multi-process job at a step boundary.
+
+    Drop-in for ``trainer.monitor`` on EVERY host (the schedule must be
+    identical everywhere or the surviving hosts' step streams would
+    diverge); only the host whose ``jax.process_index()`` matches
+    ``process_to_kill`` actually dies.  The survivors then hit dead-host
+    detection — a stale heartbeat or an unreached checkpoint barrier —
+    and exit with ``HostLossError``, which is the restart contract the
+    kill-and-resume bit-identity test drives end to end.
+    """
+
+    def __init__(self, kill_step: int, process_to_kill: int = 1,
+                 **monitor_kwargs: Any):
+        super().__init__(kill_step, **monitor_kwargs)
+        self.process_to_kill = process_to_kill
+
+    def observe(self, step: int, dt: float) -> bool:
+        import jax
+
+        if step >= self.kill_step and jax.process_index() == self.process_to_kill:
+            kill_process()
+        return StragglerMonitor.observe(self, step, dt)
+
+
+def free_port() -> int:
+    """An OS-assigned free TCP port (for the jax coordination service)."""
+    import socket
+
+    with socket.socket(socket.AF_INET, socket.SOCK_STREAM) as s:
+        s.bind(("127.0.0.1", 0))
+        return s.getsockname()[1]
+
+
+class HostResult:
+    """One launched host's outcome: returncode / stdout / stderr."""
+
+    def __init__(self, process_id: int, returncode: int, stdout: str, stderr: str):
+        self.process_id = process_id
+        self.returncode = returncode
+        self.stdout = stdout
+        self.stderr = stderr
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return (f"HostResult(process_id={self.process_id}, "
+                f"returncode={self.returncode})")
+
+
+def launch_hosts(
+    script: str,
+    argv: list[str],
+    *,
+    num_processes: int = 2,
+    env: dict[str, str] | None = None,
+    timeout: float = 600.0,
+    cwd: str | None = None,
+) -> list[HostResult]:
+    """Run ``script`` as ``num_processes`` coordinated jax processes.
+
+    Spawns ``python -c script argv...`` once per process with the
+    ``MILO_*`` env triplet ``multihost.initialize()`` consumes (one shared
+    free coordinator port), waits for ALL of them, and returns their
+    results in process order.  No return code policy is imposed here — a
+    kill test asserts ``-SIGKILL`` on the victim and nonzero on the
+    survivors, a happy-path test asserts all zero.
+    """
+    import subprocess
+    import sys
+
+    port = free_port()
+    procs = []
+    base_env = dict(os.environ)
+    if env:
+        base_env.update(env)
+    for i in range(num_processes):
+        e = dict(base_env)
+        e.update(
+            MILO_COORDINATOR=f"localhost:{port}",
+            MILO_NUM_PROCESSES=str(num_processes),
+            MILO_PROCESS_ID=str(i),
+        )
+        procs.append(subprocess.Popen(
+            [sys.executable, "-c", script, *[str(a) for a in argv]],
+            env=e, cwd=cwd,
+            stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True,
+        ))
+    results = []
+    try:
+        for i, p in enumerate(procs):
+            out, err = p.communicate(timeout=timeout)
+            results.append(HostResult(i, p.returncode, out, err))
+    finally:
+        for p in procs:
+            if p.poll() is None:
+                p.kill()
+                p.communicate()
+    return results
 
 
 def flaky(

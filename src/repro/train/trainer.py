@@ -104,6 +104,19 @@ class TrainerConfig:
     # rolled-back step are tolerated on replay (skip semantics) so a
     # deterministic NaN cannot re-trigger forever.
     guard: GuardPolicy | None = None
+    # Multi-host liveness: when set, this host writes a heartbeat beacon
+    # (``multihost.HeartbeatWriter``) at every step/segment boundary and
+    # checks every peer's freshness — a peer stale past
+    # ``heartbeat_timeout`` raises ``HostLossError`` (the launcher restarts
+    # with the survivors; ``elastic_plan`` re-meshes; resume lands on the
+    # last *globally*-valid checkpoint).  The directory must be shared
+    # across the job's hosts (two local processes share a tmpdir in CI).
+    heartbeat_dir: str | None = None
+    heartbeat_timeout: float = 60.0
+    # bound on every wait a dead peer could hang inside the two-phase
+    # distributed checkpoint (barriers, manifest collection, publication
+    # poll); expiry raises HostLossError instead of deadlocking the job
+    barrier_timeout: float = 120.0
 
 
 class Trainer:
@@ -139,8 +152,23 @@ class Trainer:
         self._pending_history: tuple | None = None
         self.monitor = StragglerMonitor()
         self.ckpt = (
-            CheckpointManager(tcfg.checkpoint_dir) if tcfg.checkpoint_dir else None
+            CheckpointManager(tcfg.checkpoint_dir,
+                              barrier_timeout=tcfg.barrier_timeout)
+            if tcfg.checkpoint_dir else None
         )
+        # multi-host liveness: beat + check at every step/segment boundary
+        if tcfg.heartbeat_dir:
+            from repro.distributed import multihost
+
+            self.heartbeat = multihost.HeartbeatWriter(tcfg.heartbeat_dir)
+            self.liveness = multihost.HeartbeatMonitor(
+                tcfg.heartbeat_dir,
+                timeout=tcfg.heartbeat_timeout,
+                expected=jax.process_count(),
+            )
+        else:
+            self.heartbeat = None
+            self.liveness = None
         self.history: list[dict] = []
         # elastic-restart plan computed when a resume sees a different
         # device count than the checkpoint's writer (None otherwise)
@@ -180,9 +208,22 @@ class Trainer:
         elastic restart needs to compare against the resuming environment."""
         return {
             "device_count": jax.device_count(),
+            "process_count": jax.process_count(),
             "data_seed": self.pipeline.seed,
             "batch_size": self.pipeline.batch_size,
         }
+
+    def _beat_and_check(self, global_step: int) -> None:
+        """Heartbeat + dead-host detection at a step/segment boundary.
+
+        Raises ``HostLossError`` when any peer's beacon is stale — the
+        process exits, the launcher restarts with the surviving hosts, and
+        ``_maybe_restore`` + ``elastic_plan`` handle the re-mesh.
+        """
+        if self.heartbeat is None:
+            return
+        self.heartbeat.beat(global_step)
+        self.liveness.check()
 
     def _save_checkpoint(self, global_step: int, state: TrainState) -> None:
         if self.tcfg.async_checkpoint:
@@ -209,6 +250,20 @@ class Trainer:
         extra = self.ckpt.manifest(latest).get("extra", {})
         saved_devices = extra.get("device_count")
         now_devices = jax.device_count()
+        saved_procs = extra.get("process_count")
+        if saved_procs and saved_procs != jax.process_count() and (
+            not saved_devices or saved_devices == now_devices
+        ):
+            # host count changed but the device count happens to match (e.g.
+            # forced-device CPU meshes): still surface the topology change
+            self.history.append({
+                "elastic": True, "step": latest,
+                "process_count": [saved_procs, jax.process_count()],
+                "grad_accum": None, "mesh_shape": None,
+                "note": f"process count {saved_procs} -> "
+                        f"{jax.process_count()} with unchanged device count",
+                "wall": round(time.time() - t0, 2),
+            })
         if saved_devices and saved_devices != now_devices:
             batch = extra.get("batch_size", self.pipeline.batch_size)
             try:
@@ -222,6 +277,8 @@ class Trainer:
                        "grad_accum": self.elastic.grad_accum,
                        "mesh_shape": list(self.elastic.mesh_shape),
                        "note": self.elastic.note}
+                if saved_procs:
+                    rec["process_count"] = [saved_procs, jax.process_count()]
             except ValueError as e:
                 # device count the batch cannot tile — surface, don't crash
                 # the resume: the state itself restored fine
@@ -267,6 +324,7 @@ class Trainer:
                 state, buffers, idx[pos : pos + seg], w[pos : pos + seg]
             )
             slow = self.monitor.stop(global_step + seg)
+            self._beat_and_check(global_step + seg)
             # rollback/abort must decide BEFORE this segment's state can be
             # checkpointed; skip_step stays sync-free (flag rides the drain)
             if self.guard is not None and self.guard.action != "skip_step":
@@ -500,6 +558,7 @@ class Trainer:
             self.monitor.start()
             state, metrics = self._step(state, self.put_batch(batch))
             slow = self.monitor.stop(global_step)
+            self._beat_and_check(global_step)
             global_step += 1
             if guard_sync and float(metrics[guard_mod.GUARD_KEY]) > 0:
                 self._on_guard_bad(1, global_step, epoch, state)

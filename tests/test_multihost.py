@@ -1,0 +1,726 @@
+"""Multi-host execution with coordinated fault tolerance (ISSUE 10).
+
+Two tiers:
+
+* **In-process (always run):** the multihost runtime primitives (env-driven
+  init, barriers, heartbeat liveness with an injectable clock), the
+  two-phase coordinated checkpoint protocol simulated with two
+  ``CheckpointManager``s rendezvousing over a ``FileBarrier`` (all-or-nothing
+  publication, torn-shard skipping visible to every host, dead-host
+  detection), checksummed compression payloads, the ArtifactStore's
+  cross-process lockfile, and the server's host-liveness health verdict.
+
+* **Real two-process (env-gated):** set ``MILO_MULTIHOST_TESTS=1`` to launch
+  actual coordinated jax process pairs (gloo CPU collectives) and pin the
+  tentpole claims for real: a 2-process selection run — the global ``sel``
+  mesh spanning both hosts — is BIT-identical to a single process exposing
+  the same two devices, and SIGKILLing one host mid-epoch then restarting
+  the pair reproduces the uninterrupted run's final params exactly
+  (``MULTIHOST_KILL_RESUME_BIT_IDENTICAL_OK``).  CI's multihost-smoke job
+  runs these on two local CPU processes.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import signal
+import subprocess
+import sys
+import threading
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpointer import CheckpointManager
+from repro.core import get_gram_free, greedy, sharded_greedy
+from repro.core.sharded import (
+    _raise_if_corrupt,
+    make_sharded_facility_location,
+)
+from repro.core.similarity import normalize_rows
+from repro.distributed import multihost
+from repro.distributed.compression import (
+    CheckedPayload,
+    CompressionIntegrityError,
+    Int8Compressed,
+    check_payload,
+    compress_with_feedback,
+    decompress_checked,
+    init_error_feedback,
+    int8_compress_checked,
+    int8_decompress,
+    payload_ok,
+)
+from repro.distributed.fault_tolerance import HostLossError
+from repro.distributed.multihost import (
+    FileBarrier,
+    HeartbeatMonitor,
+    HeartbeatWriter,
+)
+from repro.distributed.sharding import selection_mesh
+from repro.serve import ArtifactStore, MiloServer
+from repro.testing.faults import launch_hosts
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+MULTIHOST = os.environ.get("MILO_MULTIHOST_TESTS") == "1"
+two_process = pytest.mark.skipif(
+    not MULTIHOST,
+    reason="set MILO_MULTIHOST_TESTS=1 to launch real two-process jax jobs "
+    "(CI multihost-smoke runs them)",
+)
+
+
+class State(NamedTuple):
+    params: dict
+    mom: dict
+    step: jax.Array
+
+
+# ---------------------------------------------------------------------------
+# runtime primitives
+# ---------------------------------------------------------------------------
+
+def test_initialize_is_noop_without_multihost_env(monkeypatch):
+    """No env triplet, no args → initialize() must not touch the runtime."""
+    for var in ("MILO_COORDINATOR", "MILO_NUM_PROCESSES", "MILO_PROCESS_ID"):
+        monkeypatch.delenv(var, raising=False)
+    assert multihost.initialize() is False
+    # num_processes < 2 is also a no-op, not an error
+    assert multihost.initialize("localhost:1", num_processes=1) is False
+    assert multihost.process_count() == jax.process_count()
+    assert multihost.is_coordinator() == (jax.process_index() == 0)
+
+
+def test_single_process_mesh_and_global_put_round_trip():
+    mesh = selection_mesh()
+    assert not multihost.mesh_spans_processes(mesh)
+    assert multihost.default_barrier() is None  # no coordination service
+    # global_put is a uniform-placement no-op semantically: values survive
+    x = jnp.arange(12.0).reshape(4, 3)
+    from jax.sharding import PartitionSpec as P
+
+    out = multihost.global_put(x, mesh, P(None, None))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(x))
+
+
+def test_file_barrier_rendezvous_and_timeout(tmp_path):
+    root = str(tmp_path / "bar")
+    b0 = FileBarrier(root, 0, 2, timeout=10.0)
+    b1 = FileBarrier(root, 1, 2, timeout=10.0)
+    t = threading.Thread(target=b1.wait, args=("go",))
+    t.start()
+    b0.wait("go")
+    t.join(timeout=10)
+    assert not t.is_alive()
+
+    alone = FileBarrier(str(tmp_path / "bar2"), 0, 2, timeout=0.2)
+    with pytest.raises(HostLossError) as ei:
+        alone.wait("nobody_comes")
+    assert ei.value.hosts == (1,)
+
+
+def test_heartbeat_staleness_is_a_pure_function_of_the_clock(tmp_path):
+    t = {"now": 100.0}
+    clock = lambda: t["now"]
+    hb = str(tmp_path / "hb")
+    w0 = HeartbeatWriter(hb, 0, clock=clock)
+    w1 = HeartbeatWriter(hb, 1, clock=clock)
+    mon = HeartbeatMonitor(hb, timeout=5.0, expected=2, clock=clock)
+    w0.beat(0)
+    w1.beat(0)
+    assert mon.stale_hosts() == []
+    mon.check()  # no raise
+    # host 1 goes quiet; host 0 keeps beating
+    t["now"] = 110.0
+    w0.beat(7)
+    assert mon.ages()[0] == pytest.approx(0.0)
+    assert mon.ages()[1] == pytest.approx(10.0)
+    assert mon.stale_hosts() == [1]
+    with pytest.raises(HostLossError) as ei:
+        mon.check()
+    assert ei.value.hosts == (1,)
+
+
+def test_heartbeat_never_seen_host_counts_stale_from_creation(tmp_path):
+    """A host that never wrote a beat must not be invisible: expected hosts
+    with no beacon age from the monitor's creation."""
+    t = {"now": 0.0}
+    hb = str(tmp_path / "hb")
+    mon = HeartbeatMonitor(hb, timeout=5.0, expected=2, clock=lambda: t["now"])
+    HeartbeatWriter(hb, 0, clock=lambda: t["now"]).beat(0)
+    t["now"] = 6.0
+    assert set(mon.stale_hosts()) == {0, 1}
+    snap = mon.snapshot()
+    assert snap["stale"] == [0, 1] and snap["expected"] == 2
+    json.dumps(snap)  # JSON-safe for health()
+
+
+# ---------------------------------------------------------------------------
+# two-phase coordinated distributed checkpoint (simulated two hosts)
+# ---------------------------------------------------------------------------
+
+def _tree(offset: float = 0.0):
+    return {"a": jnp.arange(12.0).reshape(3, 4) + offset,
+            "b": {"c": jnp.ones((64,), jnp.float32) * (1 + offset)}}
+
+
+def _two_host_save(ckpt_root, bar_root, step, tree, *, extra=None,
+                   timeout=30.0):
+    """Run one coordinated save on two CheckpointManagers (threads)."""
+    mgrs = [
+        CheckpointManager(
+            ckpt_root, process_index=i, process_count=2,
+            barrier=FileBarrier(bar_root, i, 2, timeout=timeout),
+            barrier_timeout=timeout,
+        )
+        for i in range(2)
+    ]
+    errs: list[BaseException | None] = [None, None]
+
+    def run(i):
+        try:
+            mgrs[i].save(step, tree, extra=extra)
+        except BaseException as e:  # surfaced to the test
+            errs[i] = e
+
+    threads = [threading.Thread(target=run, args=(i,)) for i in range(2)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=60)
+    assert not any(t.is_alive() for t in threads), "a host hung in the save"
+    return mgrs, errs
+
+
+def test_two_phase_save_publishes_one_global_manifest(tmp_path):
+    ckpt = str(tmp_path / "ckpt")
+    mgrs, errs = _two_host_save(ckpt, str(tmp_path / "bar"), 3, _tree(1.0),
+                                extra={"process_count": 2})
+    assert errs == [None, None]
+    for mgr in mgrs:
+        man = mgr.validate_step(3)
+        assert man["format"] == 3
+        assert man["num_shards"] == 2
+        assert man["hosts"] == [0, 1]
+        assert set(man["checksums"]) == {"shard_0.npz", "shard_1.npz"}
+        assert man["extra"] == {"process_count": 2}
+        assert mgr.latest_valid_step() == 3
+    # replicated shards merge to the saved tree on restore
+    out = mgrs[0].restore(3, _tree())
+    np.testing.assert_array_equal(np.asarray(out["a"]),
+                                  np.arange(12.0).reshape(3, 4) + 1.0)
+    # no staging leftovers after a successful publish
+    assert not os.path.exists(os.path.join(ckpt, "step_3.tmp"))
+
+
+def test_torn_multihost_shard_skipped_on_every_host(tmp_path):
+    """A published checkpoint losing ONE host's shard pages must be skipped
+    by ``latest_valid_step`` on all hosts — the global manifest's checksums
+    make the damage visible everywhere."""
+    ckpt = str(tmp_path / "ckpt")
+    _two_host_save(ckpt, str(tmp_path / "bar1"), 1, _tree(1.0))
+    mgrs, errs = _two_host_save(ckpt, str(tmp_path / "bar2"), 2, _tree(2.0))
+    assert errs == [None, None]
+    shard1 = os.path.join(ckpt, "step_2", "shard_1.npz")
+    size = os.path.getsize(shard1)
+    with open(shard1, "r+b") as f:
+        f.truncate(size // 2)
+    for mgr in mgrs:
+        assert not mgr.is_valid_step(2)
+        assert mgr.latest_valid_step() == 1
+
+
+def test_dead_host_publishes_nothing(tmp_path):
+    """Host 1 never shows up: host 0 raises ``HostLossError`` naming it and
+    NO checkpoint is published — all-or-nothing."""
+    ckpt = str(tmp_path / "ckpt")
+    mgr = CheckpointManager(
+        ckpt, process_index=0, process_count=2,
+        barrier=FileBarrier(str(tmp_path / "bar"), 0, 2, timeout=0.3),
+        barrier_timeout=0.3,
+    )
+    with pytest.raises(HostLossError) as ei:
+        mgr.save(5, _tree())
+    assert ei.value.hosts == (1,)
+    assert mgr.latest_valid_step() is None
+    assert not os.path.exists(os.path.join(ckpt, "step_5"))
+
+
+def test_multiprocess_manager_requires_a_barrier(tmp_path):
+    """process_count > 1 with no coordination service and no injected
+    barrier must fail loudly, not write an uncoordinated checkpoint."""
+    mgr = CheckpointManager(str(tmp_path), process_index=0, process_count=2)
+    with pytest.raises(RuntimeError, match="barrier"):
+        mgr.save(1, _tree())
+
+
+def test_single_host_manifest_format_unchanged(tmp_path):
+    """The single-process path keeps writing format-2 manifests — the
+    multi-host protocol must not perturb existing checkpoint consumers."""
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, _tree())
+    man = mgr.validate_step(1)
+    assert man["format"] == 2 and man["num_shards"] == 1
+
+
+def test_resume_from_two_host_checkpoint_records_topology_change(tmp_path):
+    """A single-process Trainer resuming a 2-host checkpoint restores the
+    merged state and surfaces the process-count change in its history (the
+    elastic-restart observable for the launch layer)."""
+    from repro.data.pipeline import Pipeline
+    from repro.models.classifier import init_mlp, nesterov_update, weighted_nll
+    from repro.selection import build_selector
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    N, D, C, K, BATCH = 128, 8, 4, 64, 16
+    rng = np.random.default_rng(0)
+    feats = rng.normal(size=(N, D)).astype(np.float32)
+    labs = rng.integers(0, C, size=N).astype(np.int64)
+
+    def train_step(state, batch):
+        loss, g = jax.value_and_grad(weighted_nll)(
+            state.params, batch["x"], batch["y"], batch["weights"])
+        p, m = nesterov_update(state.params, state.mom, g, 0.05)
+        return State(p, m, state.step + 1), {"loss": loss}
+
+    params = init_mlp(jax.random.PRNGKey(0), D, C)
+    state = State(params, jax.tree.map(jnp.zeros_like, params),
+                  jnp.zeros((), jnp.int32))
+    ckpt = str(tmp_path / "ckpt")
+    # a checkpoint written by a (fictional) 2-host run whose GLOBAL device
+    # count happens to match this resume's (CPU: 1 device either way)
+    _, errs = _two_host_save(
+        ckpt, str(tmp_path / "bar"), 4, state,
+        extra={"device_count": jax.device_count(), "process_count": 2,
+               "data_seed": 1, "batch_size": BATCH},
+    )
+    assert errs == [None, None]
+
+    sel = build_selector("adaptive_random", n=N, k=K, R=1, seed=3)
+    pipe = Pipeline(None, sel, BATCH, seed=1, arrays={"x": feats, "y": labs})
+    tr = Trainer(jax.jit(train_step), pipe,
+                 TrainerConfig(epochs=2, checkpoint_dir=ckpt), fused=True)
+    tr.fit(state, resume=True)
+    recs = [h for h in tr.history if h.get("elastic")]
+    assert len(recs) == 1 and recs[0]["step"] == 4
+    assert recs[0]["process_count"] == [2, 1]
+    assert tr.elastic is None  # device count unchanged → no re-tiling plan
+
+
+# ---------------------------------------------------------------------------
+# compression: checksummed payloads, EF determinism, exactness escape hatch
+# ---------------------------------------------------------------------------
+
+def test_int8_round_trip_exact_on_grid_and_exact_escape_hatch():
+    """Values on the int8 grid survive compression bit-exactly, and the
+    ``compress=None`` escape hatch is bit-identical to the single-device
+    engine (the exactness contract the compressed path is measured against)."""
+    q = jnp.arange(-127, 128, dtype=jnp.int32).astype(jnp.int8)
+    x = q.astype(jnp.float32) * 0.5       # scale is exactly 0.5
+    p = int8_compress_checked(x)
+    assert bool(payload_ok(p))
+    np.testing.assert_array_equal(np.asarray(p.q), np.asarray(q))
+    np.testing.assert_array_equal(np.asarray(decompress_checked(p)),
+                                  np.asarray(x))
+    np.testing.assert_array_equal(
+        np.asarray(int8_decompress(Int8Compressed(p.q, p.scale))),
+        np.asarray(x))
+
+    rng = np.random.default_rng(0)
+    z = normalize_rows(jnp.asarray(rng.normal(size=(64, 8)).astype(np.float32)))
+    fn_exact = make_sharded_facility_location(n_shards=1)
+    assert "_c8" not in fn_exact.name
+    a = greedy(get_gram_free("facility_location"), z, 8)
+    b = sharded_greedy(fn_exact, z, 8, mesh=selection_mesh(1))
+    np.testing.assert_array_equal(np.asarray(a.indices), np.asarray(b.indices))
+    np.testing.assert_array_equal(np.asarray(a.gains), np.asarray(b.gains))
+
+
+def test_error_feedback_deterministic_under_fixed_seed():
+    rng = np.random.default_rng(3)
+    grads = {"w": jnp.asarray(rng.normal(size=(32, 8)).astype(np.float32)),
+             "b": jnp.asarray(rng.normal(size=(8,)).astype(np.float32))}
+    key = jax.random.PRNGKey(5)
+
+    def run():
+        ef = init_error_feedback(grads)
+        outs = []
+        for _ in range(3):
+            out, ef = compress_with_feedback(grads, ef, scheme="int8", key=key)
+            outs.append(out)
+        return outs, ef
+
+    outs1, ef1 = run()
+    outs2, ef2 = run()
+    for o1, o2 in zip(outs1, outs2):
+        for k in o1:
+            np.testing.assert_array_equal(np.asarray(o1[k]), np.asarray(o2[k]))
+    for k in grads:
+        np.testing.assert_array_equal(np.asarray(ef1.residual[k]),
+                                      np.asarray(ef2.residual[k]))
+    # error feedback carries the quantization residual forward: after one
+    # round, residual + delivered == accumulated signal, never dropped
+    ef0 = init_error_feedback(grads)
+    out1, ef_next = compress_with_feedback(grads, ef0, scheme="int8", key=key)
+    np.testing.assert_allclose(
+        np.asarray(ef_next.residual["w"]) + np.asarray(out1["w"]),
+        np.asarray(grads["w"]) + np.asarray(ef0.residual["w"]),
+        rtol=0, atol=1e-6)
+
+
+def test_checksum_rejects_bit_flipped_payload():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(257,)).astype(np.float32))
+    p = int8_compress_checked(x)
+    check_payload(p)  # intact passes
+    bad = CheckedPayload(p.q.at[3].set(p.q[3] ^ 1), p.scale, p.checksum)
+    assert not bool(payload_ok(bad))
+    assert np.isnan(np.asarray(decompress_checked(bad))).all()
+    with pytest.raises(CompressionIntegrityError):
+        check_payload(bad)
+
+
+def test_compressed_setfunction_naming_and_corrupt_gain_guard():
+    fnc = make_sharded_facility_location(n_shards=2, compress="int8",
+                                         compress_rounds=3)
+    assert fnc.name.endswith("_c8r3")  # distinct jit-cache identity
+    with pytest.raises(ValueError, match="unknown compression scheme"):
+        make_sharded_facility_location(n_shards=2, compress="zstd")
+
+    class Compressed:
+        name = "x_c8r2"
+
+    class Exact:
+        name = "x"
+
+    with pytest.raises(CompressionIntegrityError):
+        _raise_if_corrupt(Compressed, jnp.array([1.0, jnp.nan]))
+    _raise_if_corrupt(Compressed, jnp.array([1.0, 2.0]))   # clean passes
+    _raise_if_corrupt(Exact, jnp.array([jnp.nan]))          # not compressed
+
+
+# ---------------------------------------------------------------------------
+# ArtifactStore: cross-process O_EXCL lockfile
+# ---------------------------------------------------------------------------
+
+class _FakeArtifact:
+    """Stands in for MiloMetadata where only ``save(path)``/``config`` matter."""
+
+    config: dict = {}
+
+    def save(self, path):
+        with open(path, "wb") as f:
+            f.write(b"artifact")
+
+
+def test_store_lock_dead_pid_takeover(tmp_path):
+    """A lockfile whose holder PID is dead is stolen (tombstone rename) and
+    the build proceeds — a SIGKILLed builder cannot wedge the key."""
+    store = ArtifactStore(str(tmp_path / "root"), lock_poll=0.001)
+    key = ("f" * 16, "c" * 16)
+    lock = store.path_for(key) + ".lock"
+    dead = subprocess.Popen([sys.executable, "-c", "pass"])
+    dead.wait()
+    with open(lock, "w") as f:
+        f.write(str(dead.pid))
+    _, _, source = store.get_or_build(key, {}, _FakeArtifact)
+    assert source == "built"
+    assert store.lock_steals == 1
+    assert not os.path.exists(lock)          # released after the build
+
+
+def test_store_lock_live_holder_waiter_loads_peer_result(tmp_path):
+    """While a LIVE process holds the lock, a waiter polls; the moment the
+    holder's artifact lands on disk the waiter loads it instead of building."""
+    store = ArtifactStore(str(tmp_path / "root"), lock_poll=0.005)
+    key = ("a" * 16, "b" * 16)
+    path = store.path_for(key)
+    lock = path + ".lock"
+    with open(lock, "w") as f:
+        f.write(str(os.getpid()))            # alive: never stolen
+
+    # a peer's finished artifact, produced through the same save path
+    peer = os.path.join(str(tmp_path), "peer.npz")
+    _FakeArtifact().save(peer)
+
+    def never_builds():
+        raise AssertionError("waiter must not build while a peer holds the lock")
+
+    results: list = []
+    import repro.serve.store as store_mod
+
+    orig_load = store_mod.MiloMetadata.load
+
+    def fake_load(p, expected_config=None):
+        assert p == path
+        return _FakeArtifact()
+
+    store_mod.MiloMetadata.load = staticmethod(fake_load)
+    try:
+        t = threading.Thread(
+            target=lambda: results.append(
+                store.get_or_build(key, {}, never_builds)))
+        t.start()
+        import time as _time
+
+        _time.sleep(0.05)                    # waiter is polling the lock
+        os.replace(peer, path)               # peer's atomic publish lands
+        t.join(timeout=30)
+    finally:
+        store_mod.MiloMetadata.load = orig_load
+        os.unlink(lock)
+    assert not t.is_alive()
+    assert results and results[0][2] == "disk"
+    assert store.lock_waits == 1 and store.builds == 0
+
+
+def test_store_lock_timeout_builds_without_lock(tmp_path):
+    """A stuck-but-alive holder only stalls waiters until lock_timeout; then
+    the waiter builds redundantly (atomic save ⇒ no torn file) rather than
+    hang forever."""
+    ticks = iter(float(i) for i in range(1000))
+    store = ArtifactStore(
+        str(tmp_path / "root"), lock_timeout=0.5,
+        clock=lambda: next(ticks), sleep=lambda s: None,
+    )
+    key = ("d" * 16, "e" * 16)
+    lock = store.path_for(key) + ".lock"
+    with open(lock, "w") as f:
+        f.write(str(os.getpid()))            # alive and never releasing
+    _, _, source = store.get_or_build(key, {}, _FakeArtifact)
+    assert source == "built"
+    assert store.lock_timeouts == 1 and store.lock_waits == 1
+    assert os.path.exists(lock)              # not ours: never released
+
+
+# ---------------------------------------------------------------------------
+# server health: per-host heartbeat liveness
+# ---------------------------------------------------------------------------
+
+def test_server_health_degrades_on_stale_host(tmp_path):
+    t = {"now": 0.0}
+    clock = lambda: t["now"]
+    hb = str(tmp_path / "hb")
+    w0 = HeartbeatWriter(hb, 0, clock=clock)
+    w1 = HeartbeatWriter(hb, 1, clock=clock)
+    w0.beat(0)
+    w1.beat(0)
+    mon = HeartbeatMonitor(hb, timeout=5.0, expected=2, clock=clock)
+    with MiloServer(num_workers=1, heartbeat_monitor=mon) as srv:
+        h = srv.health()
+        assert h["status"] == "ok"
+        assert h["hosts"]["stale"] == [] and set(h["hosts"]["ages"]) == {"0", "1"}
+        t["now"] = 10.0
+        w0.beat(1)                           # host 0 alive, host 1 silent
+        h = srv.health()
+        assert h["status"] == "degraded"
+        assert h["hosts"]["stale"] == [1]
+        assert h["hosts"]["ages"]["1"] == pytest.approx(10.0)
+    assert srv.health()["status"] == "stopped"
+
+
+# ---------------------------------------------------------------------------
+# real two-process jobs (env-gated; CI multihost-smoke)
+# ---------------------------------------------------------------------------
+
+#: children each expose ONE CPU device so the global mesh is 2 devices —
+#: the same logical mesh the single-process reference forces locally
+CHILD_ENV = {"PYTHONPATH": "src", "JAX_PLATFORMS": "cpu", "XLA_FLAGS": ""}
+
+SELECT_SCRIPT = r"""
+import json, sys
+out = sys.argv[1]
+from repro.distributed import multihost
+multihost.initialize()
+import jax
+import numpy as np
+import jax.numpy as jnp
+from repro.core import make_sharded_gram_free, sharded_greedy
+from repro.core.similarity import normalize_rows
+from repro.distributed.sharding import selection_mesh
+from repro.selection import build_selector
+
+assert jax.device_count() == 2, jax.device_count()
+rng = np.random.default_rng(0)
+feats = rng.normal(size=(256, 16)).astype(np.float32)
+z = normalize_rows(jnp.asarray(feats))
+mesh = selection_mesh()
+fn = make_sharded_gram_free("facility_location", n_shards=2)
+res = sharded_greedy(fn, z, 24, mesh=mesh)
+fnc = make_sharded_gram_free("facility_location", n_shards=2,
+                             compress="int8", compress_rounds=2)
+resc = sharded_greedy(fnc, z, 24, mesh=mesh)
+plan = build_selector("milo_fixed", features=feats, k=32,
+                      shard_selection=True).plan(0)
+bits = lambda a: np.asarray(a, np.float32).view(np.uint32).tolist()
+payload = {
+    "devices": jax.device_count(),
+    "indices": np.asarray(res.indices).tolist(),
+    "gains_bits": bits(res.gains),
+    "c_indices": np.asarray(resc.indices).tolist(),
+    "c_gains_bits": bits(resc.gains),
+    "plan_indices": np.asarray(plan.indices).tolist(),
+    "plan_weights_bits": bits(plan.weights),
+    "plan_phase": plan.phase,
+}
+with open(f"{out}.{jax.process_index()}.json", "w") as f:
+    json.dump(payload, f)
+print("SELECT_DONE", jax.process_index())
+"""
+
+TRAIN_SCRIPT = r"""
+import sys
+mode, ckpt_dir, hb_dir, out = sys.argv[1:5]
+from repro.distributed import multihost
+multihost.initialize()
+import numpy as np, jax, jax.numpy as jnp
+from typing import NamedTuple
+from repro.data.pipeline import Pipeline
+from repro.models.classifier import init_mlp, nesterov_update, weighted_nll
+from repro.selection import build_selector
+from repro.train.trainer import Trainer, TrainerConfig
+
+N, D, C, K, BATCH = 256, 8, 4, 96, 16      # 6 steps per epoch
+rng = np.random.default_rng(0)
+feats = rng.normal(size=(N, D)).astype(np.float32)
+labs = rng.integers(0, C, size=N).astype(np.int64)
+
+class State(NamedTuple):
+    params: dict
+    mom: dict
+    step: jax.Array
+
+def train_step(state, batch):
+    loss, g = jax.value_and_grad(weighted_nll)(
+        state.params, batch["x"], batch["y"], batch["weights"])
+    p, m = nesterov_update(state.params, state.mom, g, 0.05)
+    return State(p, m, state.step + 1), {"loss": loss}
+
+sel = build_selector("adaptive_random", n=N, k=K, R=1, seed=3)
+pipe = Pipeline(None, sel, BATCH, seed=1, arrays={"x": feats, "y": labs})
+tr = Trainer(jax.jit(train_step), pipe,
+             TrainerConfig(epochs=3, checkpoint_dir=ckpt_dir,
+                           checkpoint_every_steps=4, async_checkpoint=False,
+                           log_every_steps=1, barrier_timeout=10.0,
+                           heartbeat_dir=(None if hb_dir == "none" else hb_dir),
+                           heartbeat_timeout=300.0),
+             fused=False)
+if mode == "kill":
+    from repro.testing.faults import KillHost
+    tr.monitor = KillHost(10, process_to_kill=1)   # mid-epoch 1
+params = init_mlp(jax.random.PRNGKey(0), D, C)
+state = State(params, jax.tree.map(jnp.zeros_like, params),
+              jnp.zeros((), jnp.int32))
+state = tr.fit(state, resume=True)
+flat = {f"p{i}": np.asarray(l)
+        for i, l in enumerate(jax.tree.leaves(state.params))}
+np.savez(f"{out}.{jax.process_index()}.npz", step=int(state.step), **flat)
+print("TRAIN_COMPLETE", jax.process_index(), int(state.step))
+"""
+
+
+def _run_single(script, argv, *, force_devices=None, timeout=300):
+    """Run the same child script as ONE process (the bit-identity reference)."""
+    env = dict(os.environ)
+    for var in ("MILO_COORDINATOR", "MILO_NUM_PROCESSES", "MILO_PROCESS_ID"):
+        env.pop(var, None)
+    env.update(CHILD_ENV)
+    if force_devices:
+        env["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={force_devices}")
+    r = subprocess.run(
+        [sys.executable, "-c", script, *[str(a) for a in argv]],
+        capture_output=True, text=True, env=env, cwd=REPO_ROOT,
+        timeout=timeout,
+    )
+    assert r.returncode == 0, r.stderr[-3000:]
+    return r
+
+
+@two_process
+def test_two_process_selection_plan_bit_identical(tmp_path):
+    """The tentpole equivalence: 2 coordinated processes × 1 device each run
+    the SAME logical selection programs as 1 process × 2 forced devices —
+    indices, gains (exact AND compressed), and the SelectionPlan are
+    bit-identical, and every host observes identical replicated results."""
+    out2 = str(tmp_path / "two")
+    results = launch_hosts(SELECT_SCRIPT, [out2], num_processes=2,
+                           env=CHILD_ENV, cwd=REPO_ROOT, timeout=420.0)
+    for r in results:
+        assert r.returncode == 0, (r.process_id, r.stderr[-3000:])
+        assert "SELECT_DONE" in r.stdout
+
+    ref = str(tmp_path / "ref")
+    _run_single(SELECT_SCRIPT, [ref], force_devices=2, timeout=420)
+
+    with open(f"{ref}.0.json") as f:
+        want = json.load(f)
+    for i in range(2):
+        with open(f"{out2}.{i}.json") as f:
+            got = json.load(f)
+        assert got == want, f"process {i} diverged from single-process run"
+
+
+@two_process
+def test_two_process_kill_resume_bit_identical(tmp_path):
+    """SIGKILL host 1 mid-epoch (two-phase checkpoints every 4 steps),
+    restart the pair, and require final params BIT-identical to both the
+    uninterrupted two-process run and a plain single-process run."""
+    # uninterrupted two-process reference
+    ref = launch_hosts(
+        TRAIN_SCRIPT, ["run", str(tmp_path / "ck_ref"), "none",
+                       str(tmp_path / "ref")],
+        num_processes=2, env=CHILD_ENV, cwd=REPO_ROOT, timeout=420.0)
+    for r in ref:
+        assert r.returncode == 0, (r.process_id, r.stderr[-3000:])
+        assert "TRAIN_COMPLETE" in r.stdout
+
+    # single-process reference (no coordination service at all)
+    _run_single(TRAIN_SCRIPT,
+                ["run", str(tmp_path / "ck_one"), "none",
+                 str(tmp_path / "one")], timeout=420)
+
+    # kill host 1 mid-epoch; heartbeats on (the beat path runs for real)
+    ck = str(tmp_path / "ck")
+    hb = str(tmp_path / "hb")
+    dead = launch_hosts(
+        TRAIN_SCRIPT, ["kill", ck, hb, str(tmp_path / "dead")],
+        num_processes=2, env=CHILD_ENV, cwd=REPO_ROOT, timeout=420.0)
+    assert dead[1].returncode == -signal.SIGKILL, dead[1].returncode
+    # the survivor detects the loss (checkpoint barrier timeout) and exits
+    # NONZERO — never hangs, never completes (rc may be the HostLossError
+    # exit or the runtime's shutdown abort; both are loud failures)
+    assert dead[0].returncode != 0, dead[0].returncode
+    assert "TRAIN_COMPLETE" not in dead[0].stdout
+    assert "HostLossError" in dead[0].stderr, dead[0].stderr[-3000:]
+
+    # the two-phase protocol left only complete checkpoints behind
+    view = CheckpointManager(ck)
+    assert view.latest_valid_step() == 8
+    assert view.validate_step(8)["num_shards"] == 2
+
+    # restart the pair: resumes from step 8, replays deterministically
+    res = launch_hosts(
+        TRAIN_SCRIPT, ["run", ck, hb, str(tmp_path / "res")],
+        num_processes=2, env=CHILD_ENV, cwd=REPO_ROOT, timeout=420.0)
+    for r in res:
+        assert r.returncode == 0, (r.process_id, r.stderr[-3000:])
+        assert "TRAIN_COMPLETE" in r.stdout
+
+    def load(path):
+        with np.load(path) as z:
+            return {k: z[k] for k in z.files}
+
+    want = load(str(tmp_path / "ref") + ".0.npz")
+    assert int(want["step"]) == 18
+    for name in ("ref.1", "one.0", "res.0", "res.1"):
+        got = load(str(tmp_path / name) + ".npz")
+        assert int(got["step"]) == 18, name
+        for k in want:
+            np.testing.assert_array_equal(want[k], got[k], err_msg=name)
+    print("MULTIHOST_KILL_RESUME_BIT_IDENTICAL_OK")
